@@ -1,0 +1,42 @@
+"""Fig. 10 — impact of GC on the write path: cumulative throughput timeline
+while loading enough data to trigger two GC cycles.
+
+Paper claim: Nezha ~= Nezha-NoGC throughout (GC runs on the separate Active
+module; writes atomically switch to New Storage), both >> Original."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+VSIZE = 4096
+N = 1200 if common.FULL else 600
+GC_THRESHOLD = (N // 3) * VSIZE  # two GC triggers over the run
+WINDOW = 50
+
+
+def run(engines=None):
+    rows = []
+    for engine in engines or ["original", "nezha_nogc", "nezha"]:
+        c = common.make_cluster(engine, gc_threshold=GC_THRESHOLD)
+        items = common.keys_values(N, VSIZE)
+        stamps = []
+        t0 = time.perf_counter()
+        for i in range(0, N, WINDOW):
+            c.put_many(items[i:i + WINDOW])
+            stamps.append(time.perf_counter() - t0)
+        eng = c.engines[c.elect().nid]
+        gcs = getattr(eng, "gc_count", 0)
+        # throughput in each window; report min/mean ratio (GC dips)
+        import numpy as np
+        widths = np.diff([0.0] + stamps)
+        thr = WINDOW / widths
+        rows.append((f"fig10_gc/{engine}", 1e6 * stamps[-1] / N,
+                     f"ops_s={N / stamps[-1]:.0f};min_window_ops_s="
+                     f"{thr.min():.0f};gc_cycles={gcs}"))
+        common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

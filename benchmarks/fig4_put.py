@@ -1,0 +1,45 @@
+"""Fig. 4 — put throughput/latency vs value size, all engines.
+
+Paper claim: Nezha ≈ Nezha-NoGC >> Dwisckey > LSM-Raft/PASV > Original/TiKV,
+driven by value-write count (>=3x -> 1x).  We report ops/s, us/op, and the
+byte-accounted value-write amplification that explains the ordering.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+VALUE_SIZES = [1024, 4096, 16384] + ([65536] if common.FULL else [])
+N_BYTES_TARGET = (32 << 20) if common.FULL else (3 << 20)
+
+VALUE_CATS = {"raft_log", "wal", "flush", "compaction", "valuelog",
+              "wisckey_vlog", "sst_ship"}
+
+
+def run(engines=None):
+    rows = []
+    detail = {}
+    for engine in engines or common.ENGINES:
+        for vsize in VALUE_SIZES:
+            n = max(N_BYTES_TARGET // vsize, 64)
+            # NOTE: this container has ONE core, so Nezha's background GC
+            # would serialize into the measured write path (the paper's
+            # 12-core nodes run it truly async).  fig4 therefore measures
+            # the write path with GC deferred; fig10 measures the inline-GC
+            # timeline explicitly.
+            c = common.make_cluster(engine, gc_threshold=1 << 60)
+            items = common.keys_values(n, vsize)
+            dt, done = common.timed(c.put_many, items)
+            m, eng = common.leader_metrics(c)
+            wa = sum(v for k, v in m.write_bytes.items()
+                     if k in VALUE_CATS) / max(eng.user_bytes, 1)
+            ops = done / dt
+            note = ";gc=deferred_async" if engine == "nezha" else ""
+            rows.append((f"fig4_put/{engine}/v{vsize}", 1e6 * dt / done,
+                         f"ops_s={ops:.0f};value_writes_x={wa:.2f}{note}"))
+            detail[(engine, vsize)] = (ops, wa)
+            common.destroy(c)
+    return rows, detail
+
+
+if __name__ == "__main__":
+    common.emit(run()[0])

@@ -1,0 +1,38 @@
+"""Fig. 5 — point-query throughput/latency vs value size.
+
+Paper claim: Nezha-NoGC < Original (offset indirection penalty) but
+Nezha > Original (hash-indexed sorted file)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+VALUE_SIZES = [1024, 4096, 16384]
+N_BYTES_TARGET = (16 << 20) if common.FULL else (3 << 20)
+N_GETS = 2000 if common.FULL else 400
+
+
+def run(engines=None):
+    rows = []
+    for engine in engines or common.ENGINES:
+        for vsize in VALUE_SIZES:
+            n = max(N_BYTES_TARGET // vsize, 64)
+            c = common.make_cluster(engine,
+                                    gc_threshold=max(N_BYTES_TARGET // 3,
+                                                     1 << 20))
+            c.put_many(common.keys_values(n, vsize))
+            if engine == "nezha":        # let GC finish reorganizing
+                c.engines[c.elect().nid].run_gc_to_completion()
+            eng = c.engines[c.elect().nid]
+            idx = common.zipf_indices(N_GETS, n)
+            dt, _ = common.timed(
+                lambda: [eng.get(f"user{i:010d}".encode()) for i in idx])
+            rows.append((f"fig5_get/{engine}/v{vsize}", 1e6 * dt / N_GETS,
+                         f"ops_s={N_GETS / dt:.0f}"))
+            common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,37 @@
+"""Fig. 7 — range-query performance vs scan cardinality (10..1000 pairs)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+SCAN_LENS = [10, 100, 1000] if common.FULL else [10, 50, 200]
+VSIZE = 4096
+N_KEYS = 2000 if common.FULL else 800
+N_SCANS = 20
+
+
+def run(engines=None):
+    rows = []
+    for engine in engines or common.ENGINES:
+        c = common.make_cluster(engine, gc_threshold=1 << 20)
+        c.put_many(common.keys_values(N_KEYS, VSIZE))
+        if engine == "nezha":
+            c.engines[c.elect().nid].run_gc_to_completion()
+        eng = c.engines[c.elect().nid]
+        for slen in SCAN_LENS:
+            def scans():
+                for s in range(N_SCANS):
+                    start = (s * 101) % (N_KEYS - slen)
+                    out = eng.scan(f"user{start:010d}".encode(),
+                                   f"user{start + slen - 1:010d}".encode())
+                    assert len(out) == slen
+
+            dt, _ = common.timed(scans)
+            rows.append((f"fig7_scanlen/{engine}/len{slen}",
+                         1e6 * dt / N_SCANS,
+                         f"scans_s={N_SCANS / dt:.1f}"))
+        common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,65 @@
+"""Fig. 8 / Table II — YCSB workloads Load + A-F (Zipf key access)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+VSIZE = 4096
+N_KEYS = 1500 if common.FULL else 500
+N_OPS = 2000 if common.FULL else 400
+
+WORKLOADS = {
+    "load": dict(write=1.0, scan=0.0, rmw=False, insert=True),
+    "A": dict(write=0.5, scan=0.0, rmw=False, insert=False),
+    "B": dict(write=0.05, scan=0.0, rmw=False, insert=False),
+    "C": dict(write=0.0, scan=0.0, rmw=False, insert=False),
+    "D": dict(write=0.05, scan=0.0, rmw=False, insert=True),
+    "E": dict(write=0.05, scan=0.95, rmw=False, insert=True),
+    "F": dict(write=0.5, scan=0.0, rmw=True, insert=False),
+}
+
+
+def run(engines=None, workloads=None):
+    rows = []
+    for engine in engines or common.ENGINES:
+        c = common.make_cluster(engine, gc_threshold=1 << 20)
+        c.put_many(common.keys_values(N_KEYS, VSIZE))
+        if engine == "nezha":
+            c.engines[c.elect().nid].run_gc_to_completion()
+        eng = c.engines[c.elect().nid]
+        rng = np.random.default_rng(9)
+        val = rng.integers(0, 256, VSIZE, dtype=np.uint8).tobytes()
+        for wname in (workloads or WORKLOADS):
+            w = WORKLOADS[wname]
+            zipf = common.zipf_indices(N_OPS, N_KEYS, seed=11)
+            inserted = N_KEYS
+
+            def ops():
+                nonlocal inserted
+                for j in range(N_OPS):
+                    i = int(zipf[j])
+                    r = rng.random()
+                    if wname == "load" or (w["insert"] and r < w["write"]):
+                        inserted += 1
+                        c.put(f"user{inserted:010d}".encode(), val)
+                    elif r < w["write"]:
+                        if w["rmw"]:
+                            eng.get(f"user{i:010d}".encode())
+                        c.put(f"user{i:010d}".encode(), val)
+                    elif r < w["write"] + w["scan"]:
+                        lo = min(i, N_KEYS - 25)
+                        eng.scan(f"user{lo:010d}".encode(),
+                                 f"user{lo + 24:010d}".encode())
+                    else:
+                        eng.get(f"user{i:010d}".encode())
+
+            dt, _ = common.timed(ops)
+            rows.append((f"fig8_ycsb/{engine}/{wname}", 1e6 * dt / N_OPS,
+                         f"ops_s={N_OPS / dt:.0f}"))
+        common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

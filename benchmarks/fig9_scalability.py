@@ -1,0 +1,26 @@
+"""Fig. 9 — put throughput/latency vs cluster size (3, 5, 7 nodes)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+SIZES = [3, 5, 7]
+VSIZE = 4096
+N_BYTES = (8 << 20) if common.FULL else (2 << 20)
+
+
+def run(engines=None):
+    rows = []
+    for engine in engines or ["original", "nezha_nogc", "nezha"]:
+        for n in SIZES:
+            # GC deferred on the measured put path (see fig4 note)
+            c = common.make_cluster(engine, n=n, gc_threshold=1 << 60)
+            items = common.keys_values(max(N_BYTES // VSIZE, 64), VSIZE)
+            dt, done = common.timed(c.put_many, items)
+            rows.append((f"fig9_scale/{engine}/n{n}", 1e6 * dt / done,
+                         f"ops_s={done / dt:.0f}"))
+            common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -1,0 +1,138 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the loop-corrected per-device HLO
+analysis (repro.launch.hlo_analysis):
+
+  compute term    = flops_per_dev / 197 TFLOP/s (bf16, TPU v5e)
+  memory term     = hbm_bytes_per_dev / 819 GB/s
+  collective term = wire_bytes_per_dev / 50 GB/s/link
+
+  MODEL_FLOPS = 6*N*D (train) | 2*N*D (prefill) | 2*N_active*B (decode),
+  ratio = MODEL_FLOPS_per_dev / HLO_flops_per_dev  (useful-compute fraction)
+  roofline_frac = useful compute time / max(term)  (the score per cell)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+
+HERE = pathlib.Path(__file__).resolve().parent
+RESULTS = HERE / "results" / "dryrun.json"
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(arch: str, shape: str, params: int, active: int,
+                grad_accum_note: str = "") -> float:
+    D = SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        return 6.0 * params * D if active == params else 6.0 * active * D
+    N = active if active != params else params
+    return 2.0 * N * D
+
+
+def bottleneck_hint(dom: str, arch: str, shape: str, ratio: float) -> str:
+    if ratio < 0.15:
+        return ("TP axis unusable by this arch's head/width factors -> "
+                "replicated compute; reshard (seq-parallel attention) or "
+                "shrink the model axis")
+    if dom == "compute":
+        return "compute-bound: cut remat recompute (policy/accum) or raise per-chip utilization"
+    if dom == "memory":
+        return "HBM-bound: fuse/flash the attention reads, larger tiles, bf16 residuals"
+    return "collective-bound: overlap AG/RS with compute, shrink FSDP gather volume (accum), int8 grad compression"
+
+
+def build_table(mesh: str = "16x16", layout: str = "paged",
+                variant: str = "base"):
+    data = json.loads(RESULTS.read_text())
+    rows = []
+    for key, v in sorted(data.items()):
+        arch, shape, m, lay, var = key.split("|")
+        if m != mesh or lay != layout or var != variant:
+            continue
+        if v.get("status") == "skipped":
+            rows.append({"arch": arch, "shape": shape, "skipped":
+                         v["reason"]})
+            continue
+        if v.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape,
+                         "skipped": f"ERROR {v.get('error')}"})
+            continue
+        pd = v["per_device"]
+        n_dev = v["n_devices"]
+        t_c = pd["flops"] / PEAK_FLOPS
+        t_m = pd["hbm_bytes"] / HBM_BW
+        t_x = pd["collective_bytes"] / LINK_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(arch, shape, v["model"]["params"],
+                         v["model"]["active_params"])
+        mf_dev = mf / n_dev
+        ratio = mf_dev / max(pd["flops"], 1)
+        useful_t = mf_dev / PEAK_FLOPS
+        frac = useful_t / max(max(terms.values()), 1e-30)
+        rows.append({
+            "arch": arch, "shape": shape, "mesh": m,
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom, "model_flops": mf,
+            "useful_ratio": ratio, "roofline_frac": frac,
+            "peak_gib": v["bytes_per_device"]["peak_live_est"] / 2 ** 30,
+            "hint": bottleneck_hint(dom, arch, shape, ratio),
+        })
+    return rows
+
+
+def render_markdown(rows) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| 6ND/HLO | roofline frac | peak GiB | what moves it |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"skip | — | {r['skipped'][:60]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2f} | {r['peak_gib']:.1f} | "
+            f"{r['hint'][:70]} |")
+    return "\n".join(out)
+
+
+def run():
+    """CSV rows for benchmarks.run: name, us_per_call(=bound step us), info."""
+    rows_out = []
+    for mesh in ["16x16", "2x16x16"]:
+        for r in build_table(mesh=mesh):
+            if "skipped" in r:
+                continue
+            bound_us = max(r["t_compute_s"], r["t_memory_s"],
+                           r["t_collective_s"]) * 1e6
+            rows_out.append((f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                             bound_us,
+                             f"dom={r['dominant']};frac="
+                             f"{r['roofline_frac']:.3f};"
+                             f"useful={r['useful_ratio']:.2f}"))
+    return rows_out
+
+
+def main():
+    md = ["# Roofline — single-pod 16x16 (256 chips), baseline variant", "",
+          render_markdown(build_table("16x16")), "",
+          "# Roofline — multi-pod 2x16x16 (512 chips)", "",
+          render_markdown(build_table("2x16x16"))]
+    out = HERE / "results" / "roofline.md"
+    out.write_text("\n".join(md))
+    print("\n".join(md))
+
+
+if __name__ == "__main__":
+    main()

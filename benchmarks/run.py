@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure + the roofline
+table from the dry-run.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode
+  REPRO_BENCH_FULL=1 ... python -m benchmarks.run    # ~10x sizes
+  python -m benchmarks.run --only fig4,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset: fig4..fig11,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (common, fig4_put, fig5_get, fig6_scan,
+                            fig7_scan_length, fig8_ycsb, fig9_scalability,
+                            fig10_gc_impact, fig11_recovery, roofline)
+
+    suites = {
+        "fig4": lambda: fig4_put.run()[0],
+        "fig5": fig5_get.run,
+        "fig6": fig6_scan.run,
+        "fig7": fig7_scan_length.run,
+        "fig8": fig8_ycsb.run,
+        "fig9": fig9_scalability.run,
+        "fig10": fig10_gc_impact.run,
+        "fig11": fig11_recovery.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t1 = time.time()
+        try:
+            rows = fn()
+            common.emit(rows)
+        except Exception as e:  # a failed suite must not hide the others
+            print(f"{name}/SUITE_ERROR,0,{e!r}")
+        print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end driver for the paper's own system: a 3-node KVS-Raft cluster
+serving put/get/scan through leader consensus, with GC cycles, a node crash,
+recovery, and snapshot catch-up — the full §III lifecycle on real files.
+
+  PYTHONPATH=src python examples/nezha_store_demo.py
+"""
+import tempfile
+
+from repro.core.cluster import Cluster
+
+wd = tempfile.mkdtemp(prefix="nezha_demo_")
+c = Cluster(n=3, engine="nezha", workdir=wd, seed=42,
+            engine_kwargs={"gc_threshold": 256 << 10, "gc_batch": 128})
+print("== electing a leader ==")
+ld = c.elect()
+print(f"   node {ld.nid} leads term {ld.current_term}")
+
+print("== loading 600 x 1KiB values (KVS-Raft: one write per value) ==")
+items = [(f"user{i:06d}".encode(), bytes([i % 256]) * 1024)
+         for i in range(600)]
+c.put_many(items)
+eng = c.engines[c.elect().nid]
+m = c.metrics[c.elect().nid]
+print(f"   leader GC cycles: {eng.gc_count}; "
+      f"value bytes written 1x to valuelog: "
+      f"{m.write_bytes['valuelog'] / 2**20:.1f} MiB "
+      f"(user data {eng.user_bytes / 2**20:.1f} MiB)")
+
+print("== three-phase reads (point + range) ==")
+print(f"   get(user000150) -> {c.get(b'user000150')[:4]}...")
+rows = c.scan(b"user000100", b"user000119")
+print(f"   scan 20 keys -> {len(rows)} rows, sorted file hit: "
+      f"{m.read_ops.get('sorted_range', 0)} sequential reads")
+
+print("== crash a follower, keep writing, restart, catch up ==")
+fol = [i for i in range(3) if i != c.elect().nid][0]
+c.crash(fol)
+c.put_many([(f"late{i:04d}".encode(), b"z" * 512) for i in range(60)])
+dt = c.restart(fol)
+c.tick(500)
+ok = c.engines[fol].get(b"late0059") == b"z" * 512
+print(f"   follower {fol} recovered in {dt * 1e3:.1f} ms; caught up: {ok}")
+
+print("== crash the LEADER; cluster stays available ==")
+old = c.elect().nid
+c.crash(old)
+c.put(b"after_failover", b"still-consistent")
+print(f"   new leader {c.elect().nid} serves: "
+      f"{c.get(b'after_failover').decode()}")
+c.destroy()
+print("OK")

@@ -1,0 +1,1 @@
+from repro.ckpt.nezha_store import NezhaCheckpointStore  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                cell_is_skipped, get)  # noqa: F401

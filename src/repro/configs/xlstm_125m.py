@@ -1,0 +1,13 @@
+"""xLSTM-125M — alternating mLSTM + sLSTM blocks [arXiv:2405.04517;
+unverified].  d_ff=0: xLSTM blocks carry their own projections."""
+from repro.configs.base import MLSTM, SLSTM, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm_125m", family="ssm", n_layers=12, d_model=768, n_heads=4,
+    n_kv_heads=4, d_ff=0, vocab_size=50304, head_dim=192,
+    block_pattern=(MLSTM, SLSTM), tie_embeddings=True,
+    source="arXiv:2405.04517",
+)
+
+SMOKE = CONFIG.replace(n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                       head_dim=32, vocab_size=128)

@@ -1,0 +1,18 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention block every 6 layers
+[arXiv:2411.15242; hf].  38 Mamba2 layers; one weight-shared attention+MLP
+block applied at layers 6,12,...,36 (6 applications, each with its own KV
+cache)."""
+from repro.configs.base import MAMBA2, ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2_1p2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=32000, head_dim=64,
+    grad_accum=4,  # 35.3 -> 9.4 GiB/dev (EXPERIMENTS.md §Dry-run)
+    block_pattern=(MAMBA2,), shared_attn_every=6, ssm_state=64,
+    ssm_head_dim=64, tie_embeddings=True,
+    source="arXiv:2411.15242",
+)
+
+SMOKE = CONFIG.replace(n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+                       head_dim=16, d_ff=128, vocab_size=128,
+                       shared_attn_every=2, ssm_state=16, ssm_head_dim=16)

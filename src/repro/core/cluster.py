@@ -1,0 +1,179 @@
+"""In-process Raft cluster: N nodes, each with its own engine directory and
+byte-accounted metrics; deterministic fault injection (crash / restart /
+partition) and client operations routed through the leader.
+
+Recovery semantics: a restarted node reloads its engine from disk
+(engine.recover()), reconstructs the Raft log tail, and re-applies committed
+entries — exactly the replay the paper times in Fig. 11 (Nezha replays
+lightweight offsets, Original replays full values through the WAL path).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.engines import ENGINES, NezhaEngine
+from repro.core.metrics import Metrics
+from repro.core.raft import LEADER, RaftNode
+from repro.core.simnet import SimNet
+
+
+class Cluster:
+    def __init__(self, n: int = 3, engine: str = "nezha", workdir: str = "",
+                 seed: int = 0, sync: bool = False, leader_hint: int = 0,
+                 engine_kwargs: Optional[dict] = None, heartbeat_every: int = 5,
+                 election_timeout=(20, 40)):
+        self.n = n
+        self.engine_name = engine
+        self.workdir = workdir
+        self.seed = seed
+        self.sync = sync
+        self.engine_kwargs = engine_kwargs or {}
+        self.heartbeat_every = heartbeat_every
+        self.election_timeout = election_timeout
+        os.makedirs(workdir, exist_ok=True)
+        self.net = SimNet(list(range(n)), seed=seed)
+        self.metrics: List[Metrics] = [Metrics() for _ in range(n)]
+        self.engines: List = [None] * n
+        self.nodes: List[Optional[RaftNode]] = [None] * n
+        self.leader_hint = leader_hint
+        for i in range(n):
+            self._make_node(i, fresh=True)
+
+    # ------------------------------------------------------------ plumbing
+    def _engine_dir(self, i: int) -> str:
+        return os.path.join(self.workdir, f"node{i}")
+
+    def _make_node(self, i: int, fresh: bool):
+        cls = ENGINES[self.engine_name]
+        eng = cls(self._engine_dir(i), self.metrics[i], sync=self.sync,
+                  is_leader=(lambda i=i: i == self.leader_hint),
+                  **self.engine_kwargs)
+        self.engines[i] = eng
+        # deterministic first leader: the hinted node times out first
+        eto = self.election_timeout
+        if i == self.leader_hint:
+            eto = (eto[0] // 2, eto[0] // 2 + 2)
+        node = RaftNode(
+            i, list(range(self.n)), self.net, eng, eng.apply,
+            seed=self.seed, election_timeout=eto,
+            heartbeat_every=self.heartbeat_every,
+            snapshot_fn=eng.snapshot,
+            install_snapshot_fn=getattr(eng, "install_snapshot", None))
+        if isinstance(eng, NezhaEngine):
+            eng.on_snapshot = node.compact_to
+        self.nodes[i] = node
+        if not fresh:
+            entries, offsets, si, st = eng.recover()
+            node.entries = list(entries)
+            node.offsets = list(offsets)
+            node.snap_index = si
+            node.snap_term = st
+            node.commit_index = si
+            node.last_applied = si
+            node.current_term, node.voted_for = eng.load_meta()
+
+    # ---------------------------------------------------------------- time
+    def tick(self, k: int = 1):
+        for _ in range(k):
+            self.net.tick()
+            for node in self.nodes:
+                if node is not None:
+                    node.tick()
+
+    def leader(self) -> Optional[RaftNode]:
+        live = [nd for i, nd in enumerate(self.nodes)
+                if nd is not None and i not in self.net.down]
+        leaders = [nd for nd in live if nd.role == LEADER]
+        if not leaders:
+            return None
+        return max(leaders, key=lambda nd: nd.current_term)
+
+    def elect(self, max_ticks: int = 2000) -> RaftNode:
+        for _ in range(max_ticks):
+            ld = self.leader()
+            if ld is not None and ld.commit_index >= ld.snap_index:
+                return ld
+            self.tick()
+        raise TimeoutError("no leader elected")
+
+    # -------------------------------------------------------------- client
+    def put(self, key: bytes, value: bytes, max_ticks: int = 2000) -> int:
+        ld = self.elect()
+        idx = ld.client_put(key, value)
+        assert idx is not None
+        for _ in range(max_ticks):
+            if ld.last_applied >= idx:
+                for e in self.engines:
+                    if e is not None:
+                        e.post_op()
+                return idx
+            self.tick()
+            if ld.role != LEADER:       # leadership changed mid-flight
+                return self.put(key, value, max_ticks)
+        raise TimeoutError("put not committed")
+
+    def put_many(self, items, window: int = 64, max_ticks: int = 200000):
+        """Pipelined puts: keep up to `window` in flight."""
+        ld = self.elect()
+        it = iter(items)
+        pending: List[int] = []
+        done = 0
+        exhausted = False
+        for _ in range(max_ticks):
+            while not exhausted and len(pending) < window:
+                nxt = next(it, None)
+                if nxt is None:
+                    exhausted = True
+                    break
+                idx = ld.client_put(nxt[0], nxt[1])
+                if idx is None:
+                    ld = self.elect()
+                    idx = ld.client_put(nxt[0], nxt[1])
+                pending.append(idx)
+            if pending:
+                self.tick()
+                applied = ld.last_applied
+                before = len(pending)
+                pending = [i for i in pending if i > applied]
+                done += before - len(pending)
+                for e in self.engines:
+                    if e is not None:
+                        e.post_op()
+            if exhausted and not pending:
+                return done
+        raise TimeoutError(f"put_many stalled: {done} done, "
+                           f"{len(pending)} pending")
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        return self.elect_engine().get(key)
+
+    def scan(self, lo: bytes, hi: bytes):
+        return self.elect_engine().scan(lo, hi)
+
+    def elect_engine(self):
+        return self.engines[self.elect().nid]
+
+    # --------------------------------------------------------------- faults
+    def crash(self, i: int):
+        self.net.crash(i)
+        if self.engines[i] is not None:
+            self.engines[i].close()
+        self.nodes[i] = None
+        self.engines[i] = None
+
+    def restart(self, i: int) -> float:
+        """Returns wall-clock recovery seconds (Fig. 11 measurement)."""
+        t0 = time.perf_counter()
+        self._make_node(i, fresh=False)
+        dt = time.perf_counter() - t0
+        self.net.restart(i)
+        return dt
+
+    def destroy(self):
+        for e in self.engines:
+            if e is not None:
+                e.close()
+        shutil.rmtree(self.workdir, ignore_errors=True)

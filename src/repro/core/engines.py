@@ -1,0 +1,615 @@
+"""Storage engines: Nezha and every baseline the paper compares against.
+
+Each engine is simultaneously (a) the Raft log store (persistence of log
+entries) and (b) the replicated state machine (apply on commit), matching how
+the paper couples/decouples the two layers:
+
+  Original    raft log (full values) + LSM[WAL -> memtable -> SST -> compact]
+              => value written >= 3x                      [paper baseline]
+  PASV        Original minus the storage-engine WAL (FAST'22)   => >= 2x
+  Dwisckey    Original raft log + WiscKey engine (value log below the LSM)
+              => 2x value writes, scattered scan reads
+  LSM-Raft    Original on the leader; followers skip WAL and receive shipped
+              compacted SSTs instead of re-compacting (SIGMOD'25)
+  Nezha-NoGC  KVS-Raft: raft log IS the ValueLog, LSM holds key->offset
+              => exactly 1x value write; reads pay indirection
+  Nezha       Nezha-NoGC + Raft-aware GC (sorted ValueLog + hash index) +
+              three-phase request routing
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.metrics import Metrics
+from repro.core.minilsm import MiniLSM
+from repro.core.raft import LogStoreBase
+from repro.core.storage import (SortedStore, StorageModule, pack_offset,
+                                unpack_offset)
+from repro.core.valuelog import KIND_PUT, LogEntry, ValueLog
+
+
+class EngineBase(LogStoreBase):
+    name = "base"
+
+    def __init__(self, dirpath: str, metrics: Optional[Metrics] = None, *,
+                 sync: bool = False,
+                 is_leader: Callable[[], bool] = lambda: True):
+        self.dir = dirpath
+        os.makedirs(dirpath, exist_ok=True)
+        self.metrics = metrics or Metrics()
+        self.sync = sync
+        self.is_leader = is_leader
+        self.user_bytes = 0
+        self._meta_path = os.path.join(dirpath, "raft_meta.json")
+
+    # ------------------------------------------------------ LogStore parts
+    def persist_meta(self, term: int, voted_for: Optional[int]):
+        with open(self._meta_path, "w") as f:
+            json.dump({"term": term, "voted_for": voted_for}, f)
+        self.metrics.on_write("raft_meta", 32)
+
+    def load_meta(self) -> Tuple[int, Optional[int]]:
+        if not os.path.exists(self._meta_path):
+            return 0, None
+        with open(self._meta_path) as f:
+            m = json.load(f)
+        return m["term"], m["voted_for"]
+
+    # --------------------------------------------------------- maintenance
+    def post_op(self):
+        """Called by the cluster between requests (GC trigger point)."""
+
+    def snapshot(self):
+        return None
+
+    def install_snapshot(self, last_index: int, last_term: int, payload):
+        raise NotImplementedError(f"{self.name} has no snapshot support")
+
+    def recover(self):
+        """Rebuild state after a crash. Returns (entries, offsets,
+        snap_index, snap_term) for the Raft log reconstruction."""
+        raise NotImplementedError
+
+    def close(self):
+        pass
+
+
+# =====================================================================
+class OriginalEngine(EngineBase):
+    """Raft + LSM-tree with WAL: the traditional >=3x-write design."""
+    name = "original"
+    wal = True
+
+    def __init__(self, dirpath, metrics=None, **kw):
+        super().__init__(dirpath, metrics, **kw)
+        self.raft_vlog = ValueLog(os.path.join(dirpath, "raft.log"),
+                                  self.metrics, category="raft_log",
+                                  sync=self.sync)
+        self._offsets: List[int] = []  # raft index (1-based) -> offset
+        self.db = MiniLSM(os.path.join(dirpath, "db"), self.metrics,
+                          wal=self.wal, sync=self.sync)
+
+    # LogStore
+    def append(self, entry: LogEntry) -> int:
+        off = self.raft_vlog.append(entry)
+        if entry.index == len(self._offsets) + 1:
+            self._offsets.append(off)
+        else:  # replacement after truncation
+            self._offsets[entry.index - 1:] = [off]
+        return off
+
+    def truncate_from(self, index: int):
+        self.raft_vlog.truncate_to(self._offsets[index - 1])
+        self._offsets = self._offsets[:index - 1]
+
+    # state machine
+    def apply(self, entry: LogEntry, offset: int):
+        self.user_bytes += len(entry.key) + len(entry.value)
+        self.db.put(entry.key, entry.value)
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        return self.db.get(key)
+
+    def scan(self, lo: bytes, hi: bytes):
+        return self.db.scan(lo, hi)
+
+    def recover(self):
+        self.db.recover()
+        entries, offsets = [], []
+        for off, e in self.raft_vlog.scan():
+            entries.append(e)
+            offsets.append(off)
+        self._offsets = offsets
+        return entries, offsets, 0, 0
+
+    def close(self):
+        self.raft_vlog.close()
+        self.db.close()
+
+
+class PASVEngine(OriginalEngine):
+    """FAST'22 PASV: drop the storage-engine WAL (passive persistence); the
+    raft log doubles as the redo log on recovery."""
+    name = "pasv"
+    wal = False
+
+    def recover(self):
+        entries, offsets, si, st = super().recover()
+        # passive data persistence: replay committed-but-unflushed entries
+        for e in entries:
+            if e.kind == KIND_PUT and self.db.get(e.key) is None:
+                self.db.put(e.key, e.value)
+        return entries, offsets, si, st
+
+
+class DwisckeyEngine(EngineBase):
+    """WiscKey below an unmodified Raft: value hits disk twice (raft log +
+    engine value log); scans read scattered offsets (no GC reorg)."""
+    name = "dwisckey"
+
+    def __init__(self, dirpath, metrics=None, **kw):
+        super().__init__(dirpath, metrics, **kw)
+        self.raft_vlog = ValueLog(os.path.join(dirpath, "raft.log"),
+                                  self.metrics, category="raft_log",
+                                  sync=self.sync)
+        self._offsets: List[int] = []
+        self.wisc_vlog = ValueLog(os.path.join(dirpath, "wisc_vlog.log"),
+                                  self.metrics, category="wisckey_vlog",
+                                  sync=self.sync)
+        self.db = MiniLSM(os.path.join(dirpath, "db"), self.metrics,
+                          wal=True, sync=self.sync)
+
+    def append(self, entry: LogEntry) -> int:
+        off = self.raft_vlog.append(entry)
+        if entry.index == len(self._offsets) + 1:
+            self._offsets.append(off)
+        else:
+            self._offsets[entry.index - 1:] = [off]
+        return off
+
+    def truncate_from(self, index: int):
+        self.raft_vlog.truncate_to(self._offsets[index - 1])
+        self._offsets = self._offsets[:index - 1]
+
+    def apply(self, entry: LogEntry, offset: int):
+        self.user_bytes += len(entry.key) + len(entry.value)
+        voff = self.wisc_vlog.append(entry)       # second value write
+        self.db.put(entry.key, pack_offset(voff))
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        v = self.db.get(key)
+        if v is None:
+            return None
+        return self.wisc_vlog.read_value_at(unpack_offset(v))
+
+    def scan(self, lo: bytes, hi: bytes):
+        out = []
+        for k, v in self.db.scan(lo, hi):
+            out.append((k, self.wisc_vlog.read_value_at(unpack_offset(v))))
+        return out
+
+    def recover(self):
+        self.db.recover()
+        entries, offsets = [], []
+        for off, e in self.raft_vlog.scan():
+            entries.append(e)
+            offsets.append(off)
+        self._offsets = offsets
+        return entries, offsets, 0, 0
+
+    def close(self):
+        self.raft_vlog.close()
+        self.wisc_vlog.close()
+        self.db.close()
+
+
+class _ShippedLSM(MiniLSM):
+    """Follower LSM under LSM-Raft: compacted SSTs arrive over the network,
+    so compaction costs one write ('sst_ship') and zero local reads."""
+
+    def compact(self):
+        self.compaction_count += 1
+        from sortedcontainers import SortedDict
+        merged = SortedDict()
+        for sst in self.l1 + self.l0:
+            for k, v in sst.items():
+                merged[k] = v   # bytes arrive from the leader: no local read
+        path = os.path.join(self.dir, f"sst_{self._sst_seq:06d}.sst")
+        self._sst_seq += 1
+        from repro.core.minilsm import SSTable
+        new_l1 = SSTable.write(path, list(merged.items()), self.metrics,
+                               "sst_ship")
+        for sst in self.l0 + self.l1:
+            sst.delete()
+        self.l0, self.l1 = [], [new_l1]
+
+
+class LSMRaftEngine(OriginalEngine):
+    """SIGMOD'25 LSM-Raft: follower-side redundancy removed (no WAL, shipped
+    compaction); the LEADER still writes everything — the paper's point is
+    that the leader dominates the critical path."""
+    name = "lsmraft"
+
+    def __init__(self, dirpath, metrics=None, **kw):
+        super().__init__(dirpath, metrics, **kw)
+        if not self.is_leader():
+            self.db.close()
+            self.db = _ShippedLSM(os.path.join(dirpath, "db"), self.metrics,
+                                  wal=False, sync=self.sync)
+
+
+# =====================================================================
+class NezhaNoGCEngine(EngineBase):
+    """KVS-Raft without GC: the raft log IS the ValueLog (single value
+    write); the LSM index holds only 8-byte offsets."""
+    name = "nezha_nogc"
+
+    def __init__(self, dirpath, metrics=None, **kw):
+        super().__init__(dirpath, metrics, **kw)
+        self.active = StorageModule(dirpath, self.metrics, "m0000",
+                                    sync=self.sync)
+
+    # LogStore: append == the one and only value persistence
+    def append(self, entry: LogEntry) -> int:
+        return self.active.vlog.append(entry)
+
+    def truncate_from(self, index: int):
+        # offsets tracked by the raft node; scan to find (rare path)
+        for off, e in self.active.vlog.scan():
+            if e.index == index:
+                self.active.vlog.truncate_to(off)
+                return
+        raise KeyError(index)
+
+    def apply(self, entry: LogEntry, offset: int):
+        self.user_bytes += len(entry.key) + len(entry.value)
+        self.active.apply(entry, offset)
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        return self.active.get(key)
+
+    def scan(self, lo: bytes, hi: bytes):
+        return self.active.scan(lo, hi)
+
+    def recover(self):
+        self.active.db.recover()
+        entries, offsets = [], []
+        # header-only: offsets suffice to replay the state machine
+        for off, e in self.active.vlog.scan_headers():
+            entries.append(e)
+            offsets.append(off)
+        return entries, offsets, 0, 0
+
+    def load_full_entry(self, index: int, offset: int) -> LogEntry:
+        return self.active.vlog.read_at(offset)
+
+    def close(self):
+        self.active.close()
+
+
+class NezhaEngine(EngineBase):
+    """Full Nezha: KVS-Raft + Raft-aware GC + three-phase request routing
+    (paper Algorithms 1-3, Table I)."""
+    name = "nezha"
+
+    def __init__(self, dirpath, metrics=None, *, gc_threshold: int = 32 << 20,
+                 gc_batch: int = 64, on_snapshot=None, **kw):
+        super().__init__(dirpath, metrics, **kw)
+        self.gc_threshold = gc_threshold
+        self.gc_batch = gc_batch
+        self.on_snapshot = on_snapshot  # callback(last_index, last_term)
+        self.gen = 0
+        self.active = StorageModule(dirpath, self.metrics,
+                                    f"m{self.gen:04d}", sync=self.sync)
+        self.new: Optional[StorageModule] = None
+        self.sorted: Optional[SortedStore] = None
+        self.gc_started = False
+        self.gc_completed = True  # no GC yet
+        self.gc_count = 0
+        self._state_path = os.path.join(dirpath, "gc_state.json")
+        self._seg_of_index: Dict[int, str] = {}
+        self._gc_iter: Optional[Iterator] = None
+        self._gc_last: Tuple[int, int] = (0, 0)     # last APPLIED (idx, term)
+        self._building: Optional[SortedStore] = None
+        self._last_by_tag: Dict[str, Tuple[int, int]] = {}
+        self._boundary: Tuple[int, int] = (0, 0)    # GC snapshot point
+
+    # --------------------------------------------------------- log store
+    def _write_module(self) -> StorageModule:
+        return self.new if self.new is not None else self.active
+
+    def append(self, entry: LogEntry) -> int:
+        mod = self._write_module()
+        off = mod.vlog.append(entry)
+        self._seg_of_index[entry.index] = mod.tag
+        self._last_by_tag[mod.tag] = (entry.index, entry.term)
+        return off
+
+    def truncate_from(self, index: int):
+        mod = self._write_module()
+        assert self._seg_of_index.get(index) in (None, mod.tag), \
+            "conflict truncation across GC segments is not supported"
+        for off, e in mod.vlog.scan():
+            if e.index == index:
+                mod.vlog.truncate_to(off)
+                return
+        raise KeyError(index)
+
+    def apply(self, entry: LogEntry, offset: int):
+        self.user_bytes += len(entry.key) + len(entry.value)
+        tag = self._seg_of_index.get(entry.index)
+        mod = self.new if (self.new is not None and tag == self.new.tag) \
+            else self.active
+        mod.apply(entry, offset)
+        self._gc_last = (entry.index, entry.term)
+
+    def load_full_entry(self, index: int, offset: int) -> LogEntry:
+        tag = self._seg_of_index.get(index)
+        mod = self.new if (self.new is not None and tag == self.new.tag) \
+            else self.active
+        return mod.vlog.read_at(offset)
+
+    # ------------------------------------------------------- three-phase
+    def _chain(self) -> List:
+        """Lookup sources, most-recent first (Algorithms 2 & 3)."""
+        chain: List = []
+        if self.new is not None:
+            chain.append(self.new)
+        chain.append(self.active)
+        if self.sorted is not None:
+            chain.append(self.sorted)
+        return chain
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        for src in self._chain():
+            v = src.get(key)
+            if v is not None:
+                return v
+        return None
+
+    def scan(self, lo: bytes, hi: bytes):
+        out: Dict[bytes, bytes] = {}
+        for src in reversed(self._chain()):   # oldest first; newest wins
+            for k, v in src.scan(lo, hi):
+                out[k] = v
+        return sorted(out.items())
+
+    # ---------------------------------------------------------------- GC
+    def post_op(self):
+        if self.gc_started and not self.gc_completed:
+            self.gc_step(self.gc_batch)
+        elif self.active.vlog.size >= self.gc_threshold:
+            self.start_gc()
+
+    def start_gc(self):
+        assert self.gc_completed, "GC already running"
+        self.gc_started, self.gc_completed = True, False
+        self.gc_count += 1
+        # snapshot point = last entry PERSISTED into the active segment; the
+        # compaction may only consume (and later drop) the active segment
+        # once everything up to this point has committed+applied — Raft's
+        # log-completeness is preserved (paper §III-E).
+        self._boundary = self._last_by_tag.get(self.active.tag, (0, 0))
+        self.gen += 1
+        self.new = StorageModule(self.dir, self.metrics, f"m{self.gen:04d}",
+                                 sync=self.sync)
+        self._building = SortedStore(self.dir, self.metrics, gen=self.gen)
+        open(self._building.path, "wb").close()
+        self._building._started = True
+        with open(self._state_path, "w") as f:
+            json.dump({"started": True, "complete": False, "gen": self.gen,
+                       "last_index": self._boundary[0],
+                       "last_term": self._boundary[1]}, f)
+        self.metrics.on_write("gc_meta", 64)
+        self._gc_snapshot_point = self._boundary
+        self._gc_iter = None  # built once the boundary has been applied
+
+    def _merged_items(self, resume_after: Optional[bytes] = None):
+        """Key-ascending merge: live data of Active (via its index, already
+        deduped+sorted) with the previous sorted store."""
+        act = iter(self.active.sorted_items())
+        old = iter(self.sorted.items()) if self.sorted is not None else iter(())
+        a = next(act, None)
+        o = next(old, None)
+        while a is not None or o is not None:
+            if o is None or (a is not None and a[0] <= o[0]):
+                key, off = a
+                if o is not None and o[0] == key:
+                    o = next(old, None)          # active version wins
+                entry = self.active.vlog.read_at(off)  # scattered GC read
+                yield key, entry
+                a = next(act, None)
+            else:
+                yield o
+                o = next(old, None)
+
+    def gc_step(self, n: int):
+        """Advance compaction by n entries; requests interleave freely."""
+        if self._gc_iter is None:
+            # barrier: wait until the whole active segment has applied
+            if self._gc_last[0] < self._gc_snapshot_point[0]:
+                return
+            self._gc_iter = self._merged_items()
+        buf = []
+        done = False
+        for _ in range(n):
+            item = next(self._gc_iter, None)
+            if item is None:
+                done = True
+                break
+            buf.append(item)
+        if buf:
+            li, lt = self._gc_snapshot_point
+            # append-mode build (incremental)
+            mode_resume = getattr(self._building, "_started", False)
+            self._building._started = True
+            with open(self._building.path, "ab" if mode_resume else "wb") as f:
+                off = f.tell()
+                for key, entry in buf:
+                    data = entry.encode()
+                    f.write(data)
+                    self.metrics.on_write("gc_sorted", len(data))
+                    self._building.index[key] = (off, len(data))
+                    self._building.keys.append(key)
+                    off += len(data)
+        if done:
+            self.finish_gc()
+
+    def finish_gc(self):
+        li, lt = self._gc_snapshot_point
+        self._building.last_index = li
+        self._building.last_term = lt
+        self._building._complete = True
+        with open(self._building.meta_path, "w") as f:
+            json.dump({"last_index": li, "last_term": lt, "complete": True}, f)
+        old_sorted = self.sorted
+        self.sorted = self._building
+        self._building = None
+        self._gc_iter = None
+        # cleanup phase: drop expired Active files (+ previous sorted gen)
+        self.active.destroy()
+        if old_sorted is not None:
+            old_sorted.destroy()
+        # role rotation: New becomes Active
+        self.active = self.new
+        self.new = None
+        self.gc_completed = True
+        with open(self._state_path, "w") as f:
+            json.dump({"started": True, "complete": True, "gen": self.gen,
+                       "last_index": li, "last_term": lt}, f)
+        self.metrics.on_write("gc_meta", 64)
+        if self.on_snapshot is not None:
+            self.on_snapshot(li, lt)
+
+    def run_gc_to_completion(self):
+        while self.gc_started and not self.gc_completed:
+            self.gc_step(1024)
+
+    # ----------------------------------------------------------- recovery
+    def recover(self):
+        state = {}
+        if os.path.exists(self._state_path):
+            with open(self._state_path) as f:
+                state = json.load(f)
+        gen = state.get("gen", 0)
+        if state.get("started") and not state.get("complete"):
+            # crashed mid-GC: resume from the interrupt point (§III-E)
+            self.gen = gen
+            prev = SortedStore(self.dir, self.metrics, gen=gen - 1)
+            self.sorted = prev if prev.load() else None
+            self.active = StorageModule(self.dir, self.metrics,
+                                        f"m{gen - 1:04d}", sync=self.sync)
+            self.active.db.recover()
+            self.new = StorageModule(self.dir, self.metrics,
+                                     f"m{gen:04d}", sync=self.sync)
+            self.new.db.recover()
+            self._building = SortedStore(self.dir, self.metrics, gen=gen)
+            resume_key = self._building.last_key_on_disk()
+            self._building._started = resume_key is not None
+            if resume_key is not None:  # reload partial index
+                self._building.index.clear()
+                self._building.keys = []
+                with open(self._building.path, "rb") as f:
+                    buf = f.read()
+                off = 0
+                while off < len(buf):
+                    e, nxt = LogEntry.decode(buf, off)
+                    self._building.index[e.key] = (off, nxt - off)
+                    self._building.keys.append(e.key)
+                    off = nxt
+            self.gc_started, self.gc_completed = True, False
+            self._gc_snapshot_point = (state["last_index"],
+                                       state["last_term"])
+            self._boundary = self._gc_snapshot_point
+            self._gc_last = (0, 0)  # re-applied by raft replay after restart
+            if resume_key is not None:
+                # compaction had begun => the barrier had passed pre-crash
+                # and the active db was WAL-recovered: resume immediately
+                # after the interrupt point (paper §III-E).
+                self._gc_last = self._gc_snapshot_point
+                full = self._merged_items()
+                self._gc_iter = (x for x in full if x[0] > resume_key)
+            else:
+                self._gc_iter = None  # barrier re-evaluated in gc_step
+        else:
+            self.gen = gen
+            cur = SortedStore(self.dir, self.metrics, gen=gen)
+            self.sorted = cur if cur.load() else None
+            self.active = StorageModule(self.dir, self.metrics,
+                                        f"m{gen:04d}", sync=self.sync)
+            self.active.db.recover()
+            self.new = None
+            self.gc_started = bool(state.get("started"))
+            self.gc_completed = True
+            if self.sorted is not None:
+                self._gc_last = (self.sorted.last_index,
+                                 self.sorted.last_term)
+        # rebuild raft tail from the live vlogs — HEADER-ONLY scan: the
+        # KVS-Raft state machine replays (key, offset), never values
+        # (the paper's Fig. 11 recovery win).  Values hydrate lazily via
+        # load_full_entry when the node must replicate old entries.
+        entries, offsets = [], []
+        mods = [self.active] + ([self.new] if self.new else [])
+        for mod in mods:
+            for off, e in mod.vlog.scan_headers():
+                entries.append(e)
+                offsets.append(off)
+                self._seg_of_index[e.index] = mod.tag
+        si, st = (self.sorted.last_index, self.sorted.last_term) \
+            if self.sorted is not None else (0, 0)
+        entries = [e for e in entries if e.index > si]
+        offsets = offsets[-len(entries):] if entries else []
+        return entries, offsets, si, st
+
+    # ----------------------------------------------------------- snapshot
+    def snapshot(self):
+        if self.sorted is None:
+            return None
+        return (self.sorted.last_index, self.sorted.last_term,
+                self.sorted.snapshot_payload())
+
+    def install_snapshot(self, last_index: int, last_term: int, payload):
+        # A shipped snapshot supersedes everything local: abort any local GC
+        # and reset the mutable modules (Raft discards the whole local log
+        # before installing, so active/new hold only superseded entries).
+        if self._building is not None:
+            self._building.destroy()
+            self._building = None
+        self._gc_iter = None
+        self.gc_started, self.gc_completed = False, True
+        if self.new is not None:
+            self.new.destroy()
+            self.new = None
+        self.active.destroy()
+        self._seg_of_index.clear()
+        self.gen += 1
+        self.active = StorageModule(self.dir, self.metrics,
+                                    f"m{self.gen:04d}", sync=self.sync)
+        store = SortedStore(self.dir, self.metrics, gen=self.gen)
+        store.install_payload(payload, last_index, last_term)
+        old = self.sorted
+        self.sorted = store
+        if old is not None:
+            old.destroy()
+        self._gc_last = (last_index, last_term)
+        with open(self._state_path, "w") as f:
+            json.dump({"started": False, "complete": True, "gen": self.gen,
+                       "last_index": last_index, "last_term": last_term}, f)
+
+    def close(self):
+        self.active.close()
+        if self.new is not None:
+            self.new.close()
+
+
+ENGINES = {
+    "original": OriginalEngine,
+    "pasv": PASVEngine,
+    "dwisckey": DwisckeyEngine,
+    "lsmraft": LSMRaftEngine,
+    "tikv": OriginalEngine,       # paper: TiKV follows the Original design
+    "nezha_nogc": NezhaNoGCEngine,
+    "nezha": NezhaEngine,
+}

@@ -1,0 +1,248 @@
+"""MiniLSM — a real (if miniature) LSM-tree engine standing in for RocksDB.
+
+Implements the pieces whose I/O the paper reasons about:
+  * WAL (optional — PASV removes it),
+  * sorted in-memory memtable with a size threshold,
+  * SSTable flush (L0), leveled compaction L0 -> L1 (fanout-triggered),
+  * point gets (memtable, then SSTs newest-first) and merged range scans.
+
+All file traffic goes through Metrics with per-category tags so write
+amplification from WAL/flush/compaction is separately visible.
+"""
+from __future__ import annotations
+
+import os
+import struct
+from bisect import bisect_left, bisect_right
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from sortedcontainers import SortedDict
+
+from repro.core.metrics import Metrics
+
+_REC = struct.Struct("<HI")  # key_len, val_len
+
+
+class SSTable:
+    def __init__(self, path: str, metrics: Metrics):
+        self.path = path
+        self.metrics = metrics
+        self.keys: List[bytes] = []
+        self.offsets: List[int] = []
+        self.lengths: List[int] = []
+        self.size = 0
+
+    @staticmethod
+    def write(path: str, items: List[Tuple[bytes, bytes]], metrics: Metrics,
+              category: str) -> "SSTable":
+        sst = SSTable(path, metrics)
+        with open(path, "wb") as f:
+            off = 0
+            for k, v in items:
+                rec = _REC.pack(len(k), len(v)) + k + v
+                f.write(rec)
+                sst.keys.append(k)
+                sst.offsets.append(off)
+                sst.lengths.append(len(rec))
+                off += len(rec)
+            sst.size = off
+        metrics.on_write(category, sst.size)
+        return sst
+
+    @staticmethod
+    def load(path: str, metrics: Metrics) -> "SSTable":
+        sst = SSTable(path, metrics)
+        with open(path, "rb") as f:
+            buf = f.read()
+        off = 0
+        while off < len(buf):
+            klen, vlen = _REC.unpack_from(buf, off)
+            k = buf[off + _REC.size: off + _REC.size + klen]
+            sst.keys.append(k)
+            sst.offsets.append(off)
+            sst.lengths.append(_REC.size + klen + vlen)
+            off += _REC.size + klen + vlen
+        sst.size = off
+        return sst
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        i = bisect_left(self.keys, key)
+        if i >= len(self.keys) or self.keys[i] != key:
+            return None
+        with open(self.path, "rb") as f:
+            f.seek(self.offsets[i])
+            rec = f.read(self.lengths[i])
+        self.metrics.on_read("sst_point", len(rec))
+        klen, vlen = _REC.unpack_from(rec, 0)
+        return rec[_REC.size + klen:_REC.size + klen + vlen]
+
+    def range(self, lo: bytes, hi: bytes) -> Iterator[Tuple[bytes, bytes]]:
+        i = bisect_left(self.keys, lo)
+        j = bisect_right(self.keys, hi)
+        if i >= j:
+            return
+        with open(self.path, "rb") as f:
+            f.seek(self.offsets[i])
+            buf = f.read(sum(self.lengths[i:j]))
+        self.metrics.on_read("sst_range", len(buf))
+        off = 0
+        for _ in range(i, j):
+            klen, vlen = _REC.unpack_from(buf, off)
+            k = buf[off + _REC.size: off + _REC.size + klen]
+            v = buf[off + _REC.size + klen: off + _REC.size + klen + vlen]
+            yield k, v
+            off += _REC.size + klen + vlen
+
+    def items(self) -> Iterator[Tuple[bytes, bytes]]:
+        yield from self.range(self.keys[0] if self.keys else b"",
+                              self.keys[-1] if self.keys else b"")
+
+    def delete(self):
+        if os.path.exists(self.path):
+            os.remove(self.path)
+
+
+class MiniLSM:
+    def __init__(self, dirpath: str, metrics: Metrics, *, wal: bool = True,
+                 memtable_limit: int = 1 << 22, l0_limit: int = 4,
+                 name: str = "lsm", sync: bool = False):
+        self.dir = dirpath
+        os.makedirs(dirpath, exist_ok=True)
+        self.metrics = metrics
+        self.wal_enabled = wal
+        self.memtable_limit = memtable_limit
+        self.l0_limit = l0_limit
+        self.name = name
+        self.sync = sync
+        self.mem: SortedDict = SortedDict()
+        self.mem_bytes = 0
+        self.l0: List[SSTable] = []
+        self.l1: List[SSTable] = []
+        self._sst_seq = 0
+        self._wal_path = os.path.join(dirpath, "wal.log")
+        self._wal = open(self._wal_path, "ab") if wal else None
+        self.compaction_count = 0
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: bytes, value: bytes):
+        if self._wal is not None:
+            rec = _REC.pack(len(key), len(value)) + key + value
+            self._wal.write(rec)
+            if self.sync:
+                self._wal.flush()
+                os.fsync(self._wal.fileno())
+                self.metrics.on_fsync()
+            self.metrics.on_write("wal", len(rec))
+        old = self.mem.get(key)
+        self.mem[key] = value
+        self.mem_bytes += len(key) + len(value) - \
+            (len(key) + len(old) if old is not None else 0)
+        if self.mem_bytes >= self.memtable_limit:
+            self.flush()
+
+    def flush(self):
+        if not self.mem:
+            return
+        path = os.path.join(self.dir, f"sst_{self._sst_seq:06d}.sst")
+        self._sst_seq += 1
+        self.l0.append(SSTable.write(path, list(self.mem.items()),
+                                     self.metrics, "flush"))
+        self.mem.clear()
+        self.mem_bytes = 0
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = open(self._wal_path, "wb")  # truncate WAL
+            self._wal.close()
+            self._wal = open(self._wal_path, "ab")
+        if len(self.l0) > self.l0_limit:
+            self.compact()
+
+    def compact(self):
+        """Merge all of L0 with L1 into a fresh L1 (newest versions win)."""
+        self.compaction_count += 1
+        merged: SortedDict = SortedDict()
+        for sst in self.l1 + self.l0:  # oldest first; newer overwrite
+            self.metrics.on_read("compaction", sst.size)
+            for k, v in sst.items():
+                merged[k] = v
+        path = os.path.join(self.dir, f"sst_{self._sst_seq:06d}.sst")
+        self._sst_seq += 1
+        new_l1 = SSTable.write(path, list(merged.items()), self.metrics,
+                               "compaction")
+        for sst in self.l0 + self.l1:
+            sst.delete()
+        self.l0, self.l1 = [], [new_l1]
+
+    # -------------------------------------------------------------- reads
+    def get(self, key: bytes) -> Optional[bytes]:
+        v = self.mem.get(key)
+        if v is not None:
+            return v
+        for sst in reversed(self.l0):
+            v = sst.get(key)
+            if v is not None:
+                return v
+        for sst in self.l1:
+            v = sst.get(key)
+            if v is not None:
+                return v
+        return None
+
+    def scan(self, lo: bytes, hi: bytes) -> List[Tuple[bytes, bytes]]:
+        """Merged range scan [lo, hi]; newest version wins."""
+        out: Dict[bytes, bytes] = {}
+        for sst in self.l1:
+            for k, v in sst.range(lo, hi):
+                out[k] = v
+        for sst in self.l0:
+            for k, v in sst.range(lo, hi):
+                out[k] = v
+        i = self.mem.bisect_left(lo)
+        j = self.mem.bisect_right(hi)
+        for k in self.mem.keys()[i:j]:
+            out[k] = self.mem[k]
+        return sorted(out.items())
+
+    def iterate_all(self) -> List[Tuple[bytes, bytes]]:
+        return self.scan(b"", b"\xff" * 64)
+
+    # ----------------------------------------------------------- recovery
+    def recover(self) -> int:
+        """Reload SSTs + replay WAL. Returns entries replayed."""
+        self.l0, self.l1 = [], []
+        ssts = sorted(f for f in os.listdir(self.dir) if f.endswith(".sst"))
+        for f in ssts:
+            sst = SSTable.load(os.path.join(self.dir, f), self.metrics)
+            self.metrics.on_read("recover_sst", sst.size)
+            self.l0.append(sst)
+        n = 0
+        if self.wal_enabled and os.path.exists(self._wal_path):
+            with open(self._wal_path, "rb") as f:
+                buf = f.read()
+            self.metrics.on_read("recover_wal", len(buf))
+            off = 0
+            while off + _REC.size <= len(buf):
+                klen, vlen = _REC.unpack_from(buf, off)
+                if off + _REC.size + klen + vlen > len(buf):
+                    break  # torn tail
+                k = buf[off + _REC.size: off + _REC.size + klen]
+                v = buf[off + _REC.size + klen: off + _REC.size + klen + vlen]
+                self.mem[k] = v
+                self.mem_bytes += klen + vlen
+                off += _REC.size + klen + vlen
+                n += 1
+        return n
+
+    def total_disk_bytes(self) -> int:
+        return sum(s.size for s in self.l0 + self.l1)
+
+    def close(self):
+        if self._wal is not None:
+            self._wal.close()
+
+    def destroy(self):
+        self.close()
+        for sst in self.l0 + self.l1:
+            sst.delete()
+        if os.path.exists(self._wal_path):
+            os.remove(self._wal_path)

@@ -1,0 +1,414 @@
+"""Raft consensus (arXiv 1409.585 / Ongaro & Ousterhout 2014), deterministic
+and storage-pluggable.
+
+The persistence hook is the point of the paper: ``log_store.append(entry)``
+is invoked exactly once per log entry, BEFORE the entry is acknowledged, and
+returns the byte offset of the persisted record.  In KVS-Raft the log store
+is the ValueLog itself, so that single append persists the value, and the
+state machine receives (entry, offset) at apply time — storing only the
+offset (paper Algorithm 1).
+
+Safety-property surface tested by tests/test_raft_properties.py:
+  Election Safety, Log Matching, Leader Completeness, State Machine Safety.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.simnet import SimNet
+from repro.core.valuelog import KIND_NOOP, KIND_PUT, LogEntry
+
+FOLLOWER, CANDIDATE, LEADER = "follower", "candidate", "leader"
+
+
+# ------------------------------------------------------------------ messages
+@dataclass
+class RequestVote:
+    term: int
+    candidate: int
+    last_log_index: int
+    last_log_term: int
+
+
+@dataclass
+class RequestVoteReply:
+    term: int
+    granted: bool
+
+
+@dataclass
+class AppendEntries:
+    term: int
+    leader: int
+    prev_log_index: int
+    prev_log_term: int
+    entries: List[LogEntry]
+    leader_commit: int
+
+
+@dataclass
+class AppendEntriesReply:
+    term: int
+    success: bool
+    match_index: int
+
+
+@dataclass
+class InstallSnapshot:
+    term: int
+    leader: int
+    last_index: int
+    last_term: int
+    payload: Any  # engine-defined snapshot blob (e.g. sorted ValueLog bytes)
+
+
+@dataclass
+class InstallSnapshotReply:
+    term: int
+    match_index: int
+
+
+class LogStoreBase:
+    """Persistence interface the engines implement."""
+
+    def append(self, entry: LogEntry) -> int:
+        raise NotImplementedError
+
+    def truncate_from(self, index: int):
+        raise NotImplementedError
+
+    def persist_meta(self, term: int, voted_for: Optional[int]):
+        pass
+
+
+class RaftNode:
+    def __init__(self, nid: int, peers: List[int], net: SimNet,
+                 log_store: LogStoreBase,
+                 apply_fn: Callable[[LogEntry, int], None],
+                 *, seed: int = 0,
+                 election_timeout: Tuple[int, int] = (20, 40),
+                 heartbeat_every: int = 5,
+                 max_entries_per_rpc: int = 64,
+                 snapshot_fn: Optional[Callable[[], Optional[Tuple[int, int, Any]]]] = None,
+                 install_snapshot_fn: Optional[Callable[[int, int, Any], None]] = None):
+        self.nid = nid
+        self.peers = [p for p in peers if p != nid]
+        self.net = net
+        self.store = log_store
+        self.apply_fn = apply_fn
+        self.snapshot_fn = snapshot_fn
+        self.install_snapshot_fn = install_snapshot_fn
+        self.rng = random.Random(seed * 7919 + nid)
+        self.eto = election_timeout
+        self.heartbeat_every = heartbeat_every
+        self.max_entries = max_entries_per_rpc
+
+        self.current_term = 0
+        self.voted_for: Optional[int] = None
+        # in-memory log: entries[i] covers raft index snap_index + 1 + i
+        self.entries: List[LogEntry] = []
+        self.offsets: List[int] = []
+        self.snap_index = 0
+        self.snap_term = 0
+
+        self.role = FOLLOWER
+        self.commit_index = 0
+        self.last_applied = 0
+        self.leader_id: Optional[int] = None
+        self.next_index: Dict[int, int] = {}
+        self.match_index: Dict[int, int] = {}
+        self.votes: set = set()
+        self._reset_election_deadline()
+        self._next_heartbeat = 0
+        # metrics for tests
+        self.applied_log: List[Tuple[int, LogEntry]] = []
+        self.leadership_history: List[Tuple[int, int]] = []
+
+    # ------------------------------------------------------------- helpers
+    def _reset_election_deadline(self):
+        self.election_deadline = self.net.time + self.rng.randint(*self.eto)
+
+    @property
+    def last_log_index(self) -> int:
+        return self.snap_index + len(self.entries)
+
+    def term_at(self, index: int) -> int:
+        if index == self.snap_index:
+            return self.snap_term
+        if index < self.snap_index or index > self.last_log_index:
+            return -1
+        return self.entries[index - self.snap_index - 1].term
+
+    def entry_at(self, index: int) -> LogEntry:
+        return self.entries[index - self.snap_index - 1]
+
+    def _hydrated(self, index: int) -> LogEntry:
+        """Lazy-value recovery support: entries restored via header-only
+        scans carry value=b'' and are re-read from the log store before
+        being replicated to a follower."""
+        e = self.entry_at(index)
+        if getattr(e, "value_len", 0) and not e.value and \
+                hasattr(self.store, "load_full_entry"):
+            off = self.offsets[index - self.snap_index - 1]
+            full = self.store.load_full_entry(index, off)
+            self.entries[index - self.snap_index - 1] = full
+            return full
+        return e
+
+    def _persist_meta(self):
+        self.store.persist_meta(self.current_term, self.voted_for)
+
+    def _become_follower(self, term: int):
+        self.current_term = term
+        self.role = FOLLOWER
+        self.voted_for = None
+        self.votes = set()
+        self._persist_meta()
+        self._reset_election_deadline()
+
+    # ------------------------------------------------------------ client
+    def client_put(self, key: bytes, value: bytes) -> Optional[int]:
+        """Leader-only. Appends + persists once; returns the raft index."""
+        if self.role != LEADER:
+            return None
+        entry = LogEntry(self.current_term, self.last_log_index + 1,
+                         KIND_PUT, key, value)
+        off = self.store.append(entry)           # THE single persistence
+        self.entries.append(entry)
+        self.offsets.append(off)
+        self.match_index[self.nid] = self.last_log_index
+        return entry.index
+
+    # -------------------------------------------------------------- tick
+    def tick(self):
+        if self.nid in self.net.down:
+            return
+        for src, msg in self.net.deliver(self.nid):
+            self._handle(src, msg)
+        now = self.net.time
+        if self.role == LEADER:
+            if now >= self._next_heartbeat:
+                self._broadcast_append()
+                self._next_heartbeat = now + self.heartbeat_every
+        elif now >= self.election_deadline:
+            self._start_election()
+        self._apply_committed()
+
+    # ---------------------------------------------------------- election
+    def _start_election(self):
+        self.role = CANDIDATE
+        self.current_term += 1
+        self.voted_for = self.nid
+        self._persist_meta()
+        self.votes = {self.nid}
+        self._reset_election_deadline()
+        for p in self.peers:
+            self.net.send(self.nid, p, RequestVote(
+                self.current_term, self.nid, self.last_log_index,
+                self.term_at(self.last_log_index)))
+        if not self.peers:
+            self._become_leader()
+
+    def _become_leader(self):
+        self.role = LEADER
+        self.leader_id = self.nid
+        self.leadership_history.append((self.current_term, self.nid))
+        self.next_index = {p: self.last_log_index + 1 for p in self.peers}
+        self.match_index = {p: 0 for p in self.peers}
+        self.match_index[self.nid] = self.last_log_index
+        # no-op barrier entry to commit previous-term entries (Raft §8)
+        entry = LogEntry(self.current_term, self.last_log_index + 1,
+                         KIND_NOOP, b"", b"")
+        off = self.store.append(entry)
+        self.entries.append(entry)
+        self.offsets.append(off)
+        self.match_index[self.nid] = self.last_log_index
+        self._broadcast_append()
+        self._next_heartbeat = self.net.time + self.heartbeat_every
+
+    # --------------------------------------------------------- replication
+    def _broadcast_append(self):
+        for p in self.peers:
+            self._send_append(p)
+
+    def _send_append(self, peer: int):
+        ni = self.next_index.get(peer, self.last_log_index + 1)
+        if ni <= self.snap_index:
+            # follower is behind our snapshot -> ship it
+            if self.snapshot_fn is not None:
+                snap = self.snapshot_fn()
+                if snap is not None:
+                    li, lt, payload = snap
+                    self.net.send(self.nid, peer, InstallSnapshot(
+                        self.current_term, self.nid, li, lt, payload))
+                    return
+            ni = self.snap_index + 1  # fallback (shouldn't happen)
+        prev = ni - 1
+        ents = [self._hydrated(i) for i in
+                range(ni, min(self.last_log_index,
+                              ni + self.max_entries - 1) + 1)]
+        size = sum(len(e.key) + len(e.value) + 19 for e in ents)
+        self.net.send(self.nid, peer, AppendEntries(
+            self.current_term, self.nid, prev, self.term_at(prev), ents,
+            self.commit_index), size=size)
+
+    def _handle(self, src: int, msg):
+        if isinstance(msg, RequestVote):
+            self._on_request_vote(src, msg)
+        elif isinstance(msg, RequestVoteReply):
+            self._on_vote_reply(src, msg)
+        elif isinstance(msg, AppendEntries):
+            self._on_append(src, msg)
+        elif isinstance(msg, AppendEntriesReply):
+            self._on_append_reply(src, msg)
+        elif isinstance(msg, InstallSnapshot):
+            self._on_install_snapshot(src, msg)
+        elif isinstance(msg, InstallSnapshotReply):
+            self._on_snapshot_reply(src, msg)
+
+    def _on_request_vote(self, src: int, m: RequestVote):
+        if m.term > self.current_term:
+            self._become_follower(m.term)
+        granted = False
+        if m.term == self.current_term and self.voted_for in (None, m.candidate):
+            my_last_term = self.term_at(self.last_log_index)
+            up_to_date = (m.last_log_term, m.last_log_index) >= \
+                (my_last_term, self.last_log_index)
+            if up_to_date:
+                granted = True
+                self.voted_for = m.candidate
+                self._persist_meta()
+                self._reset_election_deadline()
+        self.net.send(self.nid, src, RequestVoteReply(self.current_term,
+                                                      granted))
+
+    def _on_vote_reply(self, src: int, m: RequestVoteReply):
+        if m.term > self.current_term:
+            self._become_follower(m.term)
+            return
+        if self.role != CANDIDATE or m.term != self.current_term:
+            return
+        if m.granted:
+            self.votes.add(src)
+            if len(self.votes) * 2 > len(self.peers) + 1:
+                self._become_leader()
+
+    def _on_append(self, src: int, m: AppendEntries):
+        if m.term > self.current_term:
+            self._become_follower(m.term)
+        if m.term < self.current_term:
+            self.net.send(self.nid, src, AppendEntriesReply(
+                self.current_term, False, 0))
+            return
+        self.role = FOLLOWER
+        self.leader_id = m.leader
+        self._reset_election_deadline()
+        # log consistency check
+        if m.prev_log_index > self.last_log_index or \
+                self.term_at(m.prev_log_index) != m.prev_log_term:
+            self.net.send(self.nid, src, AppendEntriesReply(
+                self.current_term, False, self.snap_index))
+            return
+        idx = m.prev_log_index
+        for e in m.entries:
+            idx += 1
+            if idx <= self.snap_index:
+                continue
+            if idx <= self.last_log_index:
+                if self.term_at(idx) == e.term:
+                    continue
+                # conflict: truncate our log from idx
+                keep = idx - self.snap_index - 1
+                if keep < len(self.offsets):
+                    self.store.truncate_from(idx)
+                self.entries = self.entries[:keep]
+                self.offsets = self.offsets[:keep]
+            off = self.store.append(e)            # single persistence
+            self.entries.append(e)
+            self.offsets.append(off)
+        if m.leader_commit > self.commit_index:
+            self.commit_index = min(m.leader_commit, self.last_log_index)
+        self.net.send(self.nid, src, AppendEntriesReply(
+            self.current_term, True, idx))
+        self._apply_committed()
+
+    def _on_append_reply(self, src: int, m: AppendEntriesReply):
+        if m.term > self.current_term:
+            self._become_follower(m.term)
+            return
+        if self.role != LEADER or m.term != self.current_term:
+            return
+        if m.success:
+            self.match_index[src] = max(self.match_index.get(src, 0),
+                                        m.match_index)
+            self.next_index[src] = self.match_index[src] + 1
+            self._advance_commit()
+            if self.next_index[src] <= self.last_log_index:
+                self._send_append(src)
+        else:
+            self.next_index[src] = max(
+                1, min(self.next_index.get(src, 1) - self.max_entries,
+                       m.match_index + 1))
+            self._send_append(src)
+
+    def _advance_commit(self):
+        for n in range(self.last_log_index, self.commit_index, -1):
+            if self.term_at(n) != self.current_term:
+                break
+            votes = sum(1 for p in self.match_index.values() if p >= n)
+            if votes * 2 > len(self.peers) + 1:
+                self.commit_index = n
+                break
+        self._apply_committed()
+
+    def _apply_committed(self):
+        while self.last_applied < self.commit_index:
+            self.last_applied += 1
+            if self.last_applied <= self.snap_index:
+                continue
+            e = self.entry_at(self.last_applied)
+            off = self.offsets[self.last_applied - self.snap_index - 1]
+            if e.kind == KIND_PUT:
+                self.apply_fn(e, off)
+            self.applied_log.append((self.last_applied, e))
+
+    # ----------------------------------------------------------- snapshot
+    def compact_to(self, index: int, term: int):
+        """Drop in-memory log prefix covered by an engine snapshot."""
+        if index <= self.snap_index:
+            return
+        keep = index - self.snap_index
+        self.entries = self.entries[keep:]
+        self.offsets = self.offsets[keep:]
+        self.snap_index = index
+        self.snap_term = term
+
+    def _on_install_snapshot(self, src: int, m: InstallSnapshot):
+        if m.term > self.current_term:
+            self._become_follower(m.term)
+        if m.term < self.current_term:
+            return
+        self.role = FOLLOWER
+        self.leader_id = m.leader
+        self._reset_election_deadline()
+        if m.last_index <= self.snap_index:
+            return
+        if self.install_snapshot_fn is not None:
+            self.install_snapshot_fn(m.last_index, m.last_term, m.payload)
+        self.entries = []
+        self.offsets = []
+        self.snap_index = m.last_index
+        self.snap_term = m.last_term
+        self.commit_index = max(self.commit_index, m.last_index)
+        self.last_applied = max(self.last_applied, m.last_index)
+        self.net.send(self.nid, src, InstallSnapshotReply(
+            self.current_term, m.last_index))
+
+    def _on_snapshot_reply(self, src: int, m: InstallSnapshotReply):
+        if self.role != LEADER:
+            return
+        self.match_index[src] = max(self.match_index.get(src, 0),
+                                    m.match_index)
+        self.next_index[src] = self.match_index[src] + 1

@@ -1,0 +1,231 @@
+"""Storage modules of Nezha's adaptive storage management (paper §III-C).
+
+  * StorageModule   — Active / New: a ValueLog (raft entries incl. values,
+                      appended once) + a MiniLSM index of key -> offset.
+  * SortedStore     — Final Compacted Storage: key-sorted ValueLog + hash
+                      index + (last_index, last_term) snapshot metadata.
+                      Supports crash-resume (last key written = interrupt
+                      point, paper §III-E).
+  * SegmentedRaftLog— raft-index -> (module, offset) mapping that survives
+                      the Active -> New role rotation across GC cycles.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.core.metrics import Metrics
+from repro.core.minilsm import MiniLSM
+from repro.core.valuelog import KIND_PUT, LogEntry, ValueLog
+
+_OFF = struct.Struct("<Q")
+
+
+def pack_offset(off: int) -> bytes:
+    return _OFF.pack(off)
+
+
+def unpack_offset(b: bytes) -> int:
+    return _OFF.unpack(b)[0]
+
+
+class StorageModule:
+    """ValueLog + lightweight key->offset index (the paper's 'RocksDB')."""
+
+    def __init__(self, dirpath: str, metrics: Metrics, tag: str,
+                 sync: bool = False):
+        self.dir = dirpath
+        self.tag = tag
+        self.metrics = metrics
+        self.vlog = ValueLog(os.path.join(dirpath, f"valuelog_{tag}.log"),
+                             metrics, category="valuelog", sync=sync)
+        self.db = MiniLSM(os.path.join(dirpath, f"db_{tag}"), metrics,
+                          wal=True, name=f"db_{tag}", sync=sync)
+
+    def apply(self, entry: LogEntry, offset: int):
+        """State-machine apply: store ONLY the offset (Algorithm 1 line 7)."""
+        self.db.put(entry.key, pack_offset(offset))
+
+    def get_offset(self, key: bytes) -> Optional[int]:
+        v = self.db.get(key)
+        return None if v is None else unpack_offset(v)
+
+    def read_value(self, offset: int) -> bytes:
+        return self.vlog.read_value_at(offset)
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        off = self.get_offset(key)
+        return None if off is None else self.read_value(off)
+
+    def scan(self, lo: bytes, hi: bytes) -> List[Tuple[bytes, bytes]]:
+        """Range scan: sorted key->offset pairs then scattered value reads."""
+        out = []
+        for k, v in self.db.scan(lo, hi):
+            out.append((k, self.read_value(unpack_offset(v))))
+        return out
+
+    def sorted_items(self) -> Iterator[Tuple[bytes, int]]:
+        for k, v in self.db.iterate_all():
+            yield k, unpack_offset(v)
+
+    def destroy(self):
+        self.vlog.delete()
+        self.db.destroy()
+
+    def close(self):
+        self.vlog.close()
+        self.db.close()
+
+
+class SortedStore:
+    """Final Compacted Storage: key-ordered ValueLog + hash index + snapshot
+    metadata.  A range scan costs one hash lookup + one sequential read."""
+
+    def __init__(self, dirpath: str, metrics: Metrics, gen: int = 0):
+        self.dir = dirpath
+        os.makedirs(dirpath, exist_ok=True)
+        self.metrics = metrics
+        self.gen = gen
+        self.path = os.path.join(dirpath, f"sorted_{gen:04d}.log")
+        self.meta_path = os.path.join(dirpath, f"sorted_{gen:04d}.meta")
+        self.index: Dict[bytes, Tuple[int, int]] = {}  # key -> (off, len)
+        self.keys: List[bytes] = []                    # sorted
+        self.last_index = 0
+        self.last_term = 0
+        self._complete = False
+
+    # --------------------------------------------------------------- build
+    def build(self, items: Iterator[Tuple[bytes, LogEntry]],
+              last_index: int, last_term: int,
+              resume_after: Optional[bytes] = None,
+              interleave=None):
+        """Write key-sorted entries.  `items` must be key-ascending.
+        resume_after: crash-recovery interrupt point (skip keys <= it).
+        interleave: optional callback run between entries (models async GC).
+        """
+        mode = "ab" if resume_after is not None else "wb"
+        with open(self.path, mode) as f:
+            off = f.tell()
+            for key, entry in items:
+                if resume_after is not None and key <= resume_after:
+                    continue
+                data = entry.encode()
+                f.write(data)
+                self.metrics.on_write("gc_sorted", len(data))
+                self.index[key] = (off, len(data))
+                self.keys.append(key)
+                off += len(data)
+                if interleave is not None:
+                    interleave()
+        self.last_index = last_index
+        self.last_term = last_term
+        self._complete = True
+        with open(self.meta_path, "w") as f:
+            json.dump({"last_index": last_index, "last_term": last_term,
+                       "complete": True}, f)
+        self.metrics.on_write("gc_meta", 64)
+
+    def last_key_on_disk(self) -> Optional[bytes]:
+        """Crash-resume support: scan the partial file for its last key."""
+        if not os.path.exists(self.path):
+            return None
+        last = None
+        with open(self.path, "rb") as f:
+            buf = f.read()
+        self.metrics.on_read("gc_resume_scan", len(buf))
+        off = 0
+        while off < len(buf):
+            try:
+                entry, nxt = LogEntry.decode(buf, off)
+            except Exception:
+                break  # torn tail
+            last = entry.key
+            off = nxt
+        return last
+
+    def load(self) -> bool:
+        """Recovery: reload index from the sorted file + meta."""
+        if not os.path.exists(self.meta_path):
+            return False
+        with open(self.meta_path) as f:
+            meta = json.load(f)
+        self.last_index = meta["last_index"]
+        self.last_term = meta["last_term"]
+        self.index.clear()
+        self.keys = []
+        with open(self.path, "rb") as f:
+            buf = f.read()
+        self.metrics.on_read("recover_sorted", len(buf))
+        off = 0
+        while off < len(buf):
+            entry, nxt = LogEntry.decode(buf, off)
+            self.index[entry.key] = (off, nxt - off)
+            self.keys.append(entry.key)
+            off = nxt
+        self._complete = True
+        return True
+
+    # --------------------------------------------------------------- reads
+    def get(self, key: bytes) -> Optional[bytes]:
+        loc = self.index.get(key)          # hash index: direct lookup
+        if loc is None:
+            return None
+        with open(self.path, "rb") as f:
+            f.seek(loc[0])
+            buf = f.read(loc[1])
+        self.metrics.on_read("sorted_point", len(buf))
+        entry, _ = LogEntry.decode(buf, 0)
+        return entry.value
+
+    def scan(self, lo: bytes, hi: bytes) -> List[Tuple[bytes, bytes]]:
+        """ONE random seek to the start key, then sequential read."""
+        from bisect import bisect_left, bisect_right
+        i = bisect_left(self.keys, lo)
+        j = bisect_right(self.keys, hi)
+        if i >= j:
+            return []
+        start = self.index[self.keys[i]][0]
+        end_off, end_len = self.index[self.keys[j - 1]]
+        with open(self.path, "rb") as f:
+            f.seek(start)
+            buf = f.read(end_off + end_len - start)
+        self.metrics.on_read("sorted_range", len(buf))
+        out, off = [], 0
+        while off < len(buf):
+            entry, off = LogEntry.decode(buf, off)
+            out.append((entry.key, entry.value))
+        return out
+
+    def items(self) -> Iterator[Tuple[bytes, LogEntry]]:
+        with open(self.path, "rb") as f:
+            buf = f.read()
+        self.metrics.on_read("gc_merge_read", len(buf))
+        off = 0
+        while off < len(buf):
+            entry, nxt = LogEntry.decode(buf, off)
+            yield entry.key, entry
+            off = nxt
+
+    def snapshot_payload(self) -> bytes:
+        """Whole sorted file — Raft InstallSnapshot payload for catch-up."""
+        with open(self.path, "rb") as f:
+            data = f.read()
+        self.metrics.on_read("snapshot_ship", len(data))
+        return data
+
+    def install_payload(self, payload: bytes, last_index: int,
+                        last_term: int):
+        with open(self.path, "wb") as f:
+            f.write(payload)
+        self.metrics.on_write("snapshot_install", len(payload))
+        with open(self.meta_path, "w") as f:
+            json.dump({"last_index": last_index, "last_term": last_term,
+                       "complete": True}, f)
+        self.load()
+
+    def destroy(self):
+        for p in (self.path, self.meta_path):
+            if os.path.exists(p):
+                os.remove(p)

@@ -1,0 +1,151 @@
+"""Append-only ValueLog — the single persistence point of KVS-Raft.
+
+Entry layout (little-endian):
+    u32 magic | u32 term | u64 index | u8 kind | u16 key_len | u32 val_len
+    key bytes | value bytes
+The (term, index) consensus metadata is serialized WITH the value (paper
+§III-B step 3): one append persists both the Raft log entry and the value.
+``append`` returns the byte offset, which is the only thing the state machine
+keeps.
+"""
+from __future__ import annotations
+
+import os
+import struct
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+from repro.core.metrics import Metrics
+
+_HDR = struct.Struct("<IIQBHI")
+MAGIC = 0x4E5A4841  # "NZHA"
+
+KIND_PUT = 1
+KIND_NOOP = 2
+KIND_SNAP = 3
+
+
+@dataclass
+class LogEntry:
+    term: int
+    index: int
+    kind: int
+    key: bytes
+    value: bytes
+
+    def encode(self) -> bytes:
+        return _HDR.pack(MAGIC, self.term, self.index, self.kind,
+                         len(self.key), len(self.value)) + self.key + self.value
+
+    @staticmethod
+    def decode(buf: bytes, off: int = 0) -> Tuple["LogEntry", int]:
+        magic, term, index, kind, klen, vlen = _HDR.unpack_from(buf, off)
+        assert magic == MAGIC, f"corrupt entry at {off}"
+        s = off + _HDR.size
+        key = buf[s:s + klen]
+        value = buf[s + klen:s + klen + vlen]
+        return LogEntry(term, index, kind, key, value), s + klen + vlen
+
+
+class ValueLog:
+    """Append-only file of LogEntry records with offset-addressed reads."""
+
+    def __init__(self, path: str, metrics: Metrics, category: str = "valuelog",
+                 sync: bool = False):
+        self.path = path
+        self.metrics = metrics
+        self.category = category
+        self.sync = sync
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "ab+")
+        self._f.seek(0, os.SEEK_END)
+        self._size = self._f.tell()
+
+    # ------------------------------------------------------------- writes
+    def append(self, entry: LogEntry) -> int:
+        data = entry.encode()
+        off = self._size
+        self._f.write(data)
+        self._size += len(data)
+        if self.sync:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self.metrics.on_fsync()
+        self.metrics.on_write(self.category, len(data))
+        return off
+
+    def flush(self):
+        self._f.flush()
+
+    # -------------------------------------------------------------- reads
+    def read_at(self, offset: int) -> LogEntry:
+        self._f.flush()
+        with open(self.path, "rb") as f:
+            f.seek(offset)
+            hdr = f.read(_HDR.size)
+            magic, term, index, kind, klen, vlen = _HDR.unpack(hdr)
+            assert magic == MAGIC, f"corrupt entry at {offset}"
+            body = f.read(klen + vlen)
+        self.metrics.on_read(self.category, _HDR.size + klen + vlen)
+        return LogEntry(term, index, kind, body[:klen], body[klen:])
+
+    def read_value_at(self, offset: int) -> bytes:
+        return self.read_at(offset).value
+
+    def scan(self) -> Iterator[Tuple[int, LogEntry]]:
+        """Sequential scan of (offset, entry) — recovery / GC path."""
+        self._f.flush()
+        with open(self.path, "rb") as f:
+            buf = f.read()
+        self.metrics.on_read(self.category + "_seq", len(buf))
+        off = 0
+        while off < len(buf):
+            entry, nxt = LogEntry.decode(buf, off)
+            yield off, entry
+            off = nxt
+
+    def scan_headers(self) -> Iterator[Tuple[int, LogEntry]]:
+        """Header-only scan: seeks past values (KVS-Raft recovery — the
+        state machine replays (key, offset) pairs, so values need never be
+        read; this is the mechanism behind the paper's Fig. 11 win).
+        Yielded entries carry value=b'' and must be hydrated via read_at()
+        before being shipped to a follower."""
+        self._f.flush()
+        with open(self.path, "rb") as f:
+            off = 0
+            while True:
+                hdr = f.read(_HDR.size)
+                if len(hdr) < _HDR.size:
+                    break
+                magic, term, index, kind, klen, vlen = _HDR.unpack(hdr)
+                assert magic == MAGIC, f"corrupt entry at {off}"
+                key = f.read(klen)
+                f.seek(vlen, os.SEEK_CUR)
+                self.metrics.on_read(self.category + "_hdr",
+                                     _HDR.size + klen)
+                e = LogEntry(term, index, kind, key, b"")
+                e.value_len = vlen  # type: ignore[attr-defined]
+                yield off, e
+                off += _HDR.size + klen + vlen
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def truncate_to(self, offset: int):
+        """Drop the tail from `offset` (Raft conflict resolution)."""
+        self._f.flush()
+        self._f.truncate(offset)
+        self._f.seek(0, os.SEEK_END)
+        self._size = offset
+
+    def close(self):
+        try:
+            self._f.close()
+        except Exception:
+            pass
+
+    def delete(self):
+        self.close()
+        if os.path.exists(self.path):
+            os.remove(self.path)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, nh, S, hd); k, v: (B, nkv, S, hd). Returns (B, nh, S, hd) f32
+    math, cast back to q.dtype."""
+    B, nh, Sq, hd = q.shape
+    nkv, Skv = k.shape[1], k.shape[2]
+    rep = nh // nkv
+    qf = q.astype(jnp.float32).reshape(B, nkv, rep, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qf, kf) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(Skv)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p, vf) / \
+        jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return o.reshape(B, nh, Sq, hd).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.kv_compaction.ops import compact_kv_pool  # noqa: F401

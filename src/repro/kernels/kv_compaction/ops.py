@@ -1,0 +1,28 @@
+"""jit'd dispatch for KV-pool compaction."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kv_compaction.kernel import compact_kv_pool_pallas
+from repro.kernels.kv_compaction.ref import compact_kv_pool_ref
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def compact_kv_pool(pool, table, *, backend: str = None):
+    """Returns (compacted_pool, identity_table)."""
+    backend = backend or default_backend()
+    if backend == "reference":
+        out = compact_kv_pool_ref(pool, table)
+    else:
+        out = compact_kv_pool_pallas(pool, table,
+                                     interpret=(backend == "pallas_interpret"))
+    B, nblk = table.shape
+    ident = jnp.tile(jnp.arange(nblk, dtype=table.dtype)[None], (B, 1))
+    return out, ident

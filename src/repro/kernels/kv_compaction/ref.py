@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for KV-pool compaction (gather to logical order)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compact_kv_pool_ref(pool, table):
+    """pool: (B, nblk, bs, C); table: (B, nblk) logical->physical.
+    Returns the pool re-packed in logical order (identity table)."""
+    return jnp.take_along_axis(pool, table[..., None, None], axis=1)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention (block-table gather)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, table, length):
+    """q: (B, nh, hd); pool_k/v: (B, nblk, bs, nkv, hd); table: (B, nblk)
+    int32 (logical block -> physical block); length: scalar or (B,) number of
+    valid tokens.  Returns (B, nh, hd)."""
+    B, nh, hd = q.shape
+    nblk, bs, nkv = pool_k.shape[1], pool_k.shape[2], pool_k.shape[3]
+    rep = nh // nkv
+    tbl = table[..., None, None, None]
+    k = jnp.take_along_axis(pool_k, tbl, axis=1).reshape(B, nblk * bs, nkv, hd)
+    v = jnp.take_along_axis(pool_v, tbl, axis=1).reshape(B, nblk * bs, nkv, hd)
+    qf = q.astype(jnp.float32).reshape(B, nkv, rep, hd)
+    s = jnp.einsum("bgrd,bkgd->bgrk", qf, k.astype(jnp.float32)) * hd ** -0.5
+    length = jnp.broadcast_to(jnp.asarray(length), (B,))
+    mask = jnp.arange(nblk * bs)[None] < length[:, None]      # (B, S)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return o.reshape(B, nh, hd).astype(q.dtype)

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place the 512 placeholder
+# devices exist; smoke tests and benchmarks see the real single device.
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --layout dense
+
+Results append to benchmarks/results/dryrun.json (idempotent per cell key) so
+the full matrix can be built incrementally across invocations.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_skipped, get
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun.json"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               layout: str = "paged", variant: str = "base"):
+    """Build + lower the step for one cell; returns (lowered, meta)."""
+    cfg = get(arch)
+    if variant != "base":
+        cfg = apply_variant(cfg, variant)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ins = steps_lib.input_specs(cfg, shape)
+    if shape.kind == "train":
+        step, rules, st_sh, b_sh = steps_lib.make_train_step(cfg, mesh, shape)
+        state = steps_lib.abstract_state(cfg)
+        lowered = step.lower(state, ins)
+    elif shape.kind == "prefill":
+        step, rules, p_sh, b_sh, c_sh = steps_lib.make_prefill_step(
+            cfg, mesh, shape, layout=layout)
+        params = steps_lib.abstract_state(cfg)["params"]
+        lowered = step.lower(params, ins)
+    else:
+        step, rules, p_sh, b_sh, c_sh = steps_lib.make_decode_step(
+            cfg, mesh, shape, layout=layout)
+        params = steps_lib.abstract_state(cfg)["params"]
+        cache = steps_lib.abstract_cache(cfg, shape, layout)
+        lowered = step.lower(params, cache, ins)
+    return lowered, {"cfg": cfg, "shape": shape, "mesh": mesh}
+
+
+def apply_variant(cfg, variant: str):
+    """Named config tweaks used by the §Perf hillclimb."""
+    mods = {
+        "nosp": dict(seq_shard=False),
+        "nogradshard": dict(grad_shard=False),
+        "attnsp": dict(attn_seq_parallel=True),
+        "accum1": dict(grad_accum=1),
+        "losschunk": dict(loss_chunk=512),
+        "remat_dots": dict(remat="dots"),
+        "remat_none": dict(remat="none"),
+        "accum2": dict(grad_accum=2),
+        "accum4": dict(grad_accum=4),
+        "accum8": dict(grad_accum=8),
+        "blk16": dict(kv_block_size=16),
+        "blk256": dict(kv_block_size=256),
+    }
+    out = cfg
+    for part in variant.split("+"):
+        if part == "base":
+            continue
+        out = out.replace(**mods[part])
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             layout: str = "paged", variant: str = "base") -> dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        return {"status": "skipped", "reason": skip}
+    n_dev = 512 if multi_pod else 256
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, layout, variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    cost = analyze(compiled.as_text(), n_devices=n_dev)
+    out = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "layout": layout, "variant": variant,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # memory_analysis is per device
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temps": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "peak_live_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        # loop-corrected per-device analysis (see hlo_analysis.py)
+        "per_device": {
+            "flops": cost.flops,
+            "hbm_bytes": cost.bytes,
+            "collective_bytes": cost.coll_bytes,
+            "collective_detail": cost.coll_detail,
+        },
+        # raw XLA numbers (loop bodies counted once) for cross-checking
+        "xla_cost_analysis": {
+            "flops": ca.get("flops", -1),
+            "bytes_accessed": ca.get("bytes accessed", -1),
+        },
+        "model": {
+            "params": meta["cfg"].param_count(),
+            "active_params": meta["cfg"].active_param_count(),
+        },
+    }
+    return out
+
+
+def cell_key(arch, shape_name, multi_pod, layout, variant):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return f"{arch}|{shape_name}|{mesh}|{layout}|{variant}"
+
+
+def save_result(key: str, result: dict):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    data = {}
+    if RESULTS.exists():
+        data = json.loads(RESULTS.read_text())
+    data[key] = result
+    RESULTS.write_text(json.dumps(data, indent=1, sort_keys=True))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--layout", default="paged", choices=["paged", "dense"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in the results file")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    existing = json.loads(RESULTS.read_text()) if RESULTS.exists() else {}
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                key = cell_key(arch, shape_name, multi_pod, args.layout,
+                               args.variant)
+                if not args.force and existing.get(key, {}).get("status") \
+                        in ("ok", "skipped"):
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[run]    {key}", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi_pod, args.layout,
+                                   args.variant)
+                    n_ok += 1
+                except Exception as e:  # record failures: they are bugs
+                    res = {"status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                    print(f"  ERROR {e!r}", flush=True)
+                save_result(key, res)
+                if res.get("status") == "ok":
+                    pd = res["per_device"]
+                    print(f"  ok lower={res['lower_s']}s "
+                          f"compile={res['compile_s']}s "
+                          f"flops/dev={pd['flops']:.3e} "
+                          f"hbm/dev={pd['hbm_bytes']:.3e} "
+                          f"coll/dev={pd['collective_bytes']:.3e}", flush=True)
+    print(f"done ok={n_ok} fail={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+from repro.models.transformer import (forward, init_cache, init_params,
+                                      lm_loss)  # noqa: F401

@@ -1,0 +1,248 @@
+"""GQA attention: chunked-causal (train/prefill) + cached decode.
+
+Two decode cache layouts, mirroring the paper's storage states (DESIGN.md §2):
+  * ``paged``  — block pool + per-sequence block table (scattered ValueLog):
+                 (B, n_blocks, block, n_kv, hd) with a logical->physical table.
+  * ``dense``  — contiguous cache (sorted ValueLog, i.e. post-GC/compaction):
+                 (B, S, n_kv, hd).
+
+The train/prefill path is a pure-jnp flash-attention equivalent (query-chunked,
+f32 logsumexp) whose arithmetic matches kernels/flash_attention; on TPU the
+Pallas kernel is substituted via kernels.flash_attention.ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg):
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nh * hd), dt),
+        "wk": dense_init(ks[1], (d, nkv * hd), dt),
+        "wv": dense_init(ks[2], (d, nkv * hd), dt),
+        "wo_attn": dense_init(ks[3], (nh * hd, d), dt, fan_in=nh * hd),
+    }
+    if cfg.qkv_bias:
+        p["wq_bias"] = jnp.zeros((nh * hd,), dt)
+        p["wk_bias"] = jnp.zeros((nkv * hd,), dt)
+        p["wv_bias"] = jnp.zeros((nkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.ones((hd,), dt)
+        p["k_norm_scale"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    B, S, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["wq_bias"]
+        k = k + params["wk_bias"]
+        v = v + params["wv_bias"]
+    q = q.reshape(B, S, nh, hd)
+    k = k.reshape(B, S, nkv, hd)
+    v = v.reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": params["q_norm_scale"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": params["k_norm_scale"]}, k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k, rep, rules=None):
+    """(B,S,nkv,hd) -> (B,S,nkv*rep,hd).  GQA heads are expanded BEFORE the
+    score einsum so the full head axis (divisible by the model axis) carries
+    the tensor-parallel sharding; a (nkv, rep) split reshape would break
+    GSPMD propagation and silently replicate attention (observed: 16x compute
+    + 245GiB temps on qwen2-72b before this fix)."""
+    if rep == 1:
+        return k
+    k = jnp.repeat(k, rep, axis=2)
+    if rules is not None:
+        k = rules.constrain(k, "batch", None, "heads")
+    return k
+
+
+def _sdpa_chunk(qc, k, v, q_pos, kv_pos, scale):
+    """One query chunk against full K/V. qc:(B,C,nh,hd) k/v:(B,S,nh,hd)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = (kv_pos[None, :] <= q_pos[:, None])          # (C, S) causal
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jax.lax.stop_gradient(jnp.maximum(m, NEG_INF)))
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o
+
+
+def chunked_causal_attention(q, k, v, *, q_offset=0, chunk=512, rules=None):
+    """q: (B,Sq,nh,hd); k,v: (B,Skv,nkv,hd). Returns (B,Sq,nh,hd)."""
+    B, Sq, nh, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    rep = nh // nkv
+    scale = hd ** -0.5
+    k = _repeat_kv(k, rep, rules)
+    v = _repeat_kv(v, rep, rules)
+    kv_pos = jnp.arange(Skv)
+    chunk = min(chunk, Sq)
+    n_chunks = Sq // chunk
+    if n_chunks <= 1:
+        o = _sdpa_chunk(q, k, v, jnp.arange(Sq) + q_offset, kv_pos, scale)
+        return o.astype(q.dtype)
+
+    qg = q.reshape(B, n_chunks, chunk, nh, hd)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        qc, start = xs
+        q_pos = start + jnp.arange(chunk) + q_offset
+        o = _sdpa_chunk(qc, k, v, q_pos, kv_pos, scale)
+        return carry, o
+
+    starts = jnp.arange(n_chunks) * chunk
+    _, o = jax.lax.scan(body, (), (jnp.moveaxis(qg, 1, 0), starts))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, nh, hd)
+    return o.astype(q.dtype)
+
+
+# ------------------------------------------------------------ cache layouts
+def init_attn_cache(cfg, batch: int, max_seq: int, layout: str, dtype=None):
+    nkv, hd, bs = cfg.n_kv_heads, cfg.hd, cfg.kv_block_size
+    dt = dtype or jnp.dtype(cfg.param_dtype)
+    if layout == "dense":
+        return {
+            "k": jnp.zeros((batch, max_seq, nkv, hd), dt),
+            "v": jnp.zeros((batch, max_seq, nkv, hd), dt),
+        }
+    n_blk = max_seq // bs
+    return {
+        "pool_k": jnp.zeros((batch, n_blk, bs, nkv, hd), dt),
+        "pool_v": jnp.zeros((batch, n_blk, bs, nkv, hd), dt),
+        # logical block -> physical block (identity = fully compacted)
+        "table": jnp.tile(jnp.arange(n_blk, dtype=jnp.int32)[None], (batch, 1)),
+    }
+
+
+def _decode_attend(q, k_all, v_all, pos, nh, rules):
+    """q:(B,1,nh,hd) vs full cache (B,S,nkv,hd) masked to <=pos.
+
+    Grouped (no KV repeat): the cache is read once — decode is HBM-bound and
+    an nh/nkv-fold repeat would overstate the memory roofline term 8x.  The
+    (nkv, rep) head split only touches q, which is tiny at decode.  The big
+    dims (batch, cache_seq) keep their sharding; softmax reductions over a
+    sharded S lower to the flash-decoding split-K all-reduce pattern."""
+    B, S, nkv, hd = k_all.shape
+    rep = nh // nkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, 1, nkv, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                   k_all.astype(jnp.float32)) * scale
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))    # per-seq positions
+    mask = jnp.arange(S)[None, :] <= pos_b[:, None]     # (B, S)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v_all.astype(jnp.float32))
+    den = jnp.sum(p, axis=-1)[..., None].transpose(0, 3, 1, 2, 4)
+    o = o / jnp.maximum(den, 1e-30)
+    return o.reshape(B, 1, nh * hd)
+
+
+def attn_decode(params, cache, x, pos, cfg, rules):
+    """One-token decode. x:(B,1,d); pos: scalar OR per-sequence (B,) index
+    (continuous batching serves ragged sequences in one lockstep batch)."""
+    B = x.shape[0]
+    nh, nkv, hd, bs = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.kv_block_size
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None]
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    bi = jnp.arange(B)
+    if "k" in cache:  # dense / compacted layout
+        k_all = cache["k"].at[bi, pos_b].set(k_new[:, 0])
+        v_all = cache["v"].at[bi, pos_b].set(v_new[:, 0])
+        new_cache = {"k": k_all, "v": v_all}
+        if rules is not None:
+            k_all = rules.constrain(k_all, "batch", "cache_seq")
+            v_all = rules.constrain(v_all, "batch", "cache_seq")
+    else:  # paged layout: write via block table, read via gather
+        blk = jnp.take_along_axis(cache["table"], (pos_b // bs)[:, None],
+                                  axis=1)[:, 0]                  # (B,)
+        slot = pos_b % bs
+        pool_k = cache["pool_k"].at[bi, blk, slot].set(k_new[:, 0])
+        pool_v = cache["pool_v"].at[bi, blk, slot].set(v_new[:, 0])
+        new_cache = dict(cache, pool_k=pool_k, pool_v=pool_v)
+        tbl = cache["table"][..., None, None, None]              # (B,nblk,1,1,1)
+        k_all = jnp.take_along_axis(pool_k, tbl, axis=1)
+        v_all = jnp.take_along_axis(pool_v, tbl, axis=1)
+        n_blk = k_all.shape[1]
+        k_all = k_all.reshape(B, n_blk * bs, nkv, hd)
+        v_all = v_all.reshape(B, n_blk * bs, nkv, hd)
+        if rules is not None:
+            k_all = rules.constrain(k_all, "batch", "cache_seq")
+            v_all = rules.constrain(v_all, "batch", "cache_seq")
+    o = _decode_attend(q, k_all, v_all, pos, nh, rules)
+    out = o.astype(x.dtype) @ params["wo_attn"]
+    return out, new_cache
+
+
+def attn_apply(params, x, cfg, rules, *, mode="train", cache=None, pos=None,
+               chunk=512):
+    """Unified entry. Returns (out, new_cache)."""
+    if mode == "decode":
+        return attn_decode(params, cache, x, pos, cfg, rules)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None]
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if rules is not None and cfg.attn_seq_parallel and mode != "decode":
+        # context parallelism: q rows sharded over `model`, K/V replicated;
+        # each rank computes its strip of the score matrix (no head-count
+        # divisibility requirement — see DESIGN.md §6 / EXPERIMENTS §Perf)
+        q = rules.constrain(q, "batch", "act_seq", None, None)
+        k = rules.constrain(k, "batch", None, None, None)
+        v = rules.constrain(v, "batch", None, None, None)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        o = _sdpa_chunk(q, _repeat_kv(k, rep), _repeat_kv(v, rep),
+                        jnp.arange(S), jnp.arange(S), cfg.hd ** -0.5)
+        o = o.astype(q.dtype)
+    else:
+        if rules is not None:
+            q = rules.constrain(q, "batch", None, "heads")
+            k = rules.constrain(k, "batch", None, "kv_heads")
+            v = rules.constrain(v, "batch", None, "kv_heads")
+        o = chunked_causal_attention(q, k, v, chunk=chunk, rules=rules)
+    out = o.reshape(B, S, -1) @ params["wo_attn"]
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        if "k" in cache:
+            k_pad = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+            v_pad = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+            new_cache = {"k": k_pad, "v": v_pad}
+        else:
+            bs = cfg.kv_block_size
+            kb = k.reshape(B, S // bs, bs, *k.shape[2:])
+            vb = v.reshape(B, S // bs, bs, *v.shape[2:])
+            # write THROUGH the block table (physical placement may be
+            # scattered — the serving allocator owns the table)
+            dest = cache["table"][:, :S // bs]               # (B, nwb)
+            bi = jnp.arange(B)[:, None]
+            pool_k = cache["pool_k"].at[bi, dest].set(kb)
+            pool_v = cache["pool_v"].at[bi, dest].set(vb)
+            new_cache = dict(cache, pool_k=pool_k, pool_v=pool_v)
+    return out, new_cache

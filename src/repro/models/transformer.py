@@ -1,0 +1,268 @@
+"""Model assembly: repeating-unit block stacks scanned over layers.
+
+The per-layer block pattern (cfg.block_pattern) is a repeating unit; params
+for each unit position are stacked over repeats and the stack is traversed
+with ``lax.scan`` so the HLO contains each distinct block exactly once
+(fast multi-pod compiles, MaxText-style).  Zamba2's shared attention block is
+closure-captured (weights shared) and applied every ``shared_attn_every``
+layers through ``lax.cond``; its per-application KV caches ride in the scan
+carry with dynamic indexing.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_MOE, MAMBA2, MLSTM, SLSTM, ModelConfig
+from repro.models import attention, mamba2, moe as moe_mod, xlstm
+from repro.models.layers import embed, embed_init, mlp, mlp_init, rmsnorm, \
+    rmsnorm_init, unembed
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------- init
+def _block_init(key, cfg, kind):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.param_dtype))}
+    if kind in (ATTN, ATTN_MOE):
+        p["attn"] = attention.attn_init(ks[0], cfg)
+        p["ln2"] = rmsnorm_init(cfg.d_model, jnp.dtype(cfg.param_dtype))
+        if kind == ATTN:
+            p["mlp"] = mlp_init(ks[1], cfg)
+        else:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    elif kind == MAMBA2:
+        p["mamba"] = mamba2.mamba2_init(ks[0], cfg)
+    elif kind == MLSTM:
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg)
+    elif kind == SLSTM:
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def n_repeats(cfg) -> int:
+    assert cfg.n_layers % len(cfg.block_pattern) == 0, \
+        f"{cfg.name}: n_layers must divide by unit length"
+    return cfg.n_layers // len(cfg.block_pattern)
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    reps = n_repeats(cfg)
+    keys = jax.random.split(key, 3 + len(cfg.block_pattern))
+    layers = []
+    for pi, kind in enumerate(cfg.block_pattern):
+        stacked = jax.vmap(
+            lambda k, kind=kind: _block_init(k, cfg, kind))(
+                jax.random.split(keys[pi], reps))
+        layers.append(stacked)
+    params = {
+        "embed": embed_init(keys[-3], cfg),
+        "layers": tuple(layers),
+        "final_norm": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+    }
+    if cfg.shared_attn_every:
+        params["shared_attn"] = {
+            "ln": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "attn": attention.attn_init(keys[-2], cfg),
+            "ln2": rmsnorm_init(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "mlp": mlp_init(keys[-1], cfg),
+        }
+    return params
+
+
+# ------------------------------------------------------------------ cache
+def _block_cache(cfg, kind, batch, max_seq, layout):
+    if kind in (ATTN, ATTN_MOE):
+        return attention.init_attn_cache(cfg, batch, max_seq, layout)
+    if kind == MAMBA2:
+        return mamba2.init_mamba_cache(cfg, batch)
+    if kind == MLSTM:
+        return xlstm.init_mlstm_cache(cfg, batch)
+    if kind == SLSTM:
+        return xlstm.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch: int, max_seq: int, layout: str = "dense") -> PyTree:
+    reps = n_repeats(cfg)
+    caches = {"layers": tuple(
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (reps,) + x.shape),
+                     _block_cache(cfg, kind, batch, max_seq, layout))
+        for kind in cfg.block_pattern)}
+    if cfg.shared_attn_every:
+        n_apps = cfg.n_layers // cfg.shared_attn_every
+        sc = attention.init_attn_cache(cfg, batch, max_seq, layout)
+        caches["shared"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_apps,) + x.shape), sc)
+    return caches
+
+
+# ------------------------------------------------------------------ apply
+def _block_apply(kind, p, x, cfg, rules, mode, cache, pos):
+    eps = cfg.norm_eps
+    h = rmsnorm(p["ln1"], x, eps)
+    new_cache = None
+    if kind in (ATTN, ATTN_MOE):
+        a, new_cache = attention.attn_apply(p["attn"], h, cfg, rules,
+                                            mode=mode, cache=cache, pos=pos)
+        x = x + a
+        h2 = rmsnorm(p["ln2"], x, eps)
+        if kind == ATTN:
+            x = x + mlp(p["mlp"], h2, cfg)
+        else:
+            x = x + moe_mod.moe_apply(p["moe"], h2, cfg, rules)
+    elif kind == MAMBA2:
+        y, new_cache = mamba2.mamba2_apply(p["mamba"], h, cfg, rules,
+                                           mode=mode, cache=cache, pos=pos)
+        x = x + y
+    elif kind == MLSTM:
+        y, new_cache = xlstm.mlstm_apply(p["mlstm"], h, cfg, rules,
+                                         mode=mode, cache=cache, pos=pos)
+        x = x + y
+    elif kind == SLSTM:
+        y, new_cache = xlstm.slstm_apply(p["slstm"], h, cfg, rules,
+                                         mode=mode, cache=cache, pos=pos)
+        x = x + y
+    if rules is not None:
+        seq = "act_seq" if cfg.seq_shard else None
+        x = rules.constrain(x, "batch", seq, None)
+    return x, new_cache
+
+
+def _shared_attn_apply(p, x, cfg, rules, mode, cache, pos):
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    a, new_cache = attention.attn_apply(p["attn"], h, cfg, rules,
+                                        mode=mode, cache=cache, pos=pos)
+    x = x + a
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + mlp(p["mlp"], h2, cfg)
+    return x, new_cache
+
+
+def forward(params, inputs, cfg: ModelConfig, rules=None, *, mode="train",
+            caches=None, pos=None, return_hidden=False):
+    """inputs: (B,S) int tokens or (B,S,d) embeds.  Returns (logits, caches)."""
+    x = embed(params["embed"], inputs, cfg)
+    if rules is not None:
+        x = rules.constrain(x, "batch",
+                            "act_seq" if cfg.seq_shard else None, None)
+    unit = cfg.block_pattern
+    use_cache = caches is not None
+    every = cfg.shared_attn_every
+
+    def body(x, xs):
+        layer_params, layer_caches = xs
+        new_caches = []
+        for pi, kind in enumerate(unit):
+            c_i = layer_caches[pi] if use_cache else None
+            x, nc = _block_apply(kind, layer_params[pi], x, cfg, rules,
+                                 mode, c_i, pos)
+            new_caches.append(nc if nc is not None else 0)
+        return x, tuple(new_caches)
+
+    if mode == "train" and cfg.remat != "none":
+        policy = {"full": jax.checkpoint_policies.nothing_saveable,
+                  "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                  }[cfg.remat]
+        body = jax.checkpoint(body, policy=policy)
+
+    def seg_scan(x, p_seg, c_seg):
+        xs = (p_seg, c_seg if use_cache else jnp.zeros(
+            (jax.tree.leaves(p_seg)[0].shape[0],)))
+        return jax.lax.scan(body, x, xs)
+
+    if every:
+        # zamba2-style: shared attention block applied (with its own cache
+        # slot) after every `every` backbone layers — statically unrolled
+        # into groups so the HLO and its cost analysis reflect the true
+        # per-layer mix (no lax.cond over-/under-counting).
+        assert len(unit) == 1, "shared_attn requires a unit-1 block pattern"
+        shared_p = params["shared_attn"]
+        groups = cfg.n_layers // every
+        rem = cfg.n_layers - groups * every
+        p_all = params["layers"][0]
+        c_all = caches["layers"][0] if use_cache else None
+        seg_caches, shared_caches = [], []
+        for g in range(groups):
+            sl = slice(g * every, (g + 1) * every)
+            p_seg = jax.tree.map(lambda a: a[sl], p_all)
+            c_seg = jax.tree.map(lambda a: a[sl], c_all) if use_cache else None
+            x, c_out = seg_scan(x, (p_seg,), (c_seg,))
+            if use_cache:
+                seg_caches.append(c_out[0])
+            sc = (jax.tree.map(lambda a: a[g], caches["shared"])
+                  if use_cache else None)
+            x, sc_out = _shared_attn_apply(shared_p, x, cfg, rules, mode,
+                                           sc, pos)
+            if use_cache:
+                shared_caches.append(sc_out)
+        if rem:
+            sl = slice(groups * every, cfg.n_layers)
+            p_seg = jax.tree.map(lambda a: a[sl], p_all)
+            c_seg = jax.tree.map(lambda a: a[sl], c_all) if use_cache else None
+            x, c_out = seg_scan(x, (p_seg,), (c_seg,))
+            if use_cache:
+                seg_caches.append(c_out[0])
+        new_caches = None
+        if use_cache:
+            new_caches = {
+                "layers": (jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=0), *seg_caches),),
+                "shared": jax.tree.map(
+                    lambda *xs: jnp.stack([u.astype(xs[0].dtype) for u in xs],
+                                          axis=0), *shared_caches),
+            }
+    else:
+        x, layer_caches_out = seg_scan(
+            x, params["layers"], caches["layers"] if use_cache else None)
+        new_caches = {"layers": layer_caches_out} if use_cache else None
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, new_caches
+    logits = unembed(params["embed"], x, cfg)
+    if rules is not None:
+        logits = rules.constrain(logits, "batch", None, "vocab")
+    return logits, new_caches
+
+
+def lm_loss(logits, labels, mask=None):
+    """Mean next-token cross-entropy. logits:(B,S,V) labels:(B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def lm_loss_chunked(params, hidden, labels, cfg, rules=None):
+    """Cross-entropy computed in sequence chunks: the (B, S, V) logits
+    tensor never materializes (per-chunk unembed + CE under jax.checkpoint).
+    Memory: O(B * loss_chunk * V) instead of O(B * S * V)."""
+    B, S, d = hidden.shape
+    c = min(cfg.loss_chunk, S)
+    n = S // c
+    hc = jnp.moveaxis(hidden.reshape(B, n, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, l = xs
+        logits = unembed(params["embed"], h, cfg)
+        if rules is not None:
+            logits = rules.constrain(logits, "batch", None, "vocab")
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, l[..., None], axis=-1)[..., 0]
+        return acc + (lse - ll).sum(), ()
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (B * S)

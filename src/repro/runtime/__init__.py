@@ -1,0 +1,1 @@
+from repro.runtime.coordinator import Coordinator, TrainRunner  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.sharding.rules import Rules, make_rules  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.train.optimizer import adamw_update, init_opt_state  # noqa: F401

@@ -1,0 +1,65 @@
+"""AdamW with global-norm clipping, built from scratch (no optax).
+
+Moment buffers live in f32 regardless of param dtype; the update is computed
+in f32 and cast back.  m/v inherit the parameter sharding (ZeRO-style: the
+optimizer state is sharded exactly like the FSDP'd parameters, so optimizer
+memory scales 1/(dp*tp))."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptHyper(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_opt_state(params: PyTree) -> Tuple[PyTree, PyTree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: PyTree, grads: PyTree, m: PyTree, v: PyTree,
+                 step: jnp.ndarray, hyper: OptHyper = OptHyper()):
+    """Returns (new_params, new_m, new_v, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hyper.clip_norm / jnp.maximum(gnorm, 1e-9))
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - hyper.b1 ** t
+    bc2 = 1.0 - hyper.b2 ** t
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m2 = hyper.b1 * m_ + (1 - hyper.b1) * g
+        v2 = hyper.b2 * v_ + (1 - hyper.b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - hyper.lr * (mhat / (jnp.sqrt(vhat) + hyper.eps)
+                              + hyper.weight_decay * pf)
+        return pf.astype(p.dtype), m2, v2
+
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = jax.tree.leaves(grads)
+    m_flat = jax.tree.leaves(m)
+    v_flat = jax.tree.leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_
+           in zip(p_flat, g_flat, m_flat, v_flat)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v, gnorm

@@ -1,0 +1,40 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def path_str(path: Tuple[Any, ...]) -> str:
+    """Human-readable pytree path ('layers/0/attn/wq')."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), leaf) for p, leaf in flat]
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ["B", "KiB", "MiB", "GiB", "TiB"]:
+        if abs(n) < 1024:
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}PiB"

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real device; only launch/dryrun.py creates the 512 placeholders.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,74 @@
+"""Serving engine: continuous batching correctness + Nezha cache GC."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import forward, init_params
+from repro.serve.engine import ServingEngine
+
+CFG = get("smollm_135m", smoke=True).replace(param_dtype="float32",
+                                             kv_block_size=8)
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def ref_generate(prompt, n):
+    toks = list(prompt)
+    for _ in range(n + 1):
+        logits, _ = forward(PARAMS, jnp.asarray([toks]), CFG, mode="train")
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_continuous_batching_matches_reference():
+    eng = ServingEngine(CFG, PARAMS, max_slots=3, max_seq=64, seed=0,
+                        scramble_blocks=True)
+    prompts = [[5, 9, 2, 7], [1, 2, 3], [11, 4, 6, 8, 10], [3, 3, 3], [9, 1]]
+    reqs = [eng.submit(p, max_new=6) for p in prompts]
+    total = eng.run_until_drained()
+    assert len(eng.finished) == len(prompts)
+    assert total >= sum(r.max_new for r in reqs)
+    for r in eng.finished:
+        exp = ref_generate(r.prompt, r.max_new)
+        assert r.out[:r.max_new] == exp[:r.max_new], (r.rid, r.out, exp)
+
+
+def test_fragmentation_and_compaction():
+    eng = ServingEngine(CFG, PARAMS, max_slots=2, max_seq=64, seed=1,
+                        scramble_blocks=True)
+    for i in range(4):
+        eng.submit([1 + i, 2, 3], max_new=4)
+    eng.run_until_drained()
+    assert eng.fragmentation() > 0.3          # scrambled tables
+    eng.compact(backend="reference")
+    assert eng.fragmentation() == 0.0         # identity layout restored
+    # correctness preserved after compaction
+    r = eng.submit([5, 9, 2, 7], max_new=5)
+    eng.run_until_drained()
+    assert r.out[:5] == ref_generate([5, 9, 2, 7], 5)[:5]
+
+
+def test_compaction_with_pallas_interpret_kernel():
+    eng = ServingEngine(CFG, PARAMS, max_slots=2, max_seq=32, seed=2,
+                        scramble_blocks=True)
+    eng.submit([4, 2], max_new=3)
+    eng.run_until_drained()
+    eng.compact(backend="pallas_interpret")   # the actual GC kernel
+    assert eng.fragmentation() == 0.0
+    r = eng.submit([4, 2], max_new=3)
+    eng.run_until_drained()
+    assert r.out[:3] == ref_generate([4, 2], 3)[:3]
+
+
+def test_mid_stream_admission():
+    """A request admitted while another is mid-decode must not corrupt it."""
+    eng = ServingEngine(CFG, PARAMS, max_slots=2, max_seq=64, seed=3,
+                        scramble_blocks=True)
+    r1 = eng.submit([7, 7, 7], max_new=8)
+    for _ in range(3):
+        eng.step()
+    r2 = eng.submit([1, 2, 3, 4], max_new=4)
+    eng.run_until_drained()
+    assert r1.out[:8] == ref_generate([7, 7, 7], 8)[:8]
+    assert r2.out[:4] == ref_generate([1, 2, 3, 4], 4)[:4]
