@@ -1,0 +1,16 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test smoke bench bench-full
+
+test:
+	$(PY) -m pytest -x -q
+
+# tiny all-engine benchmark gate (also: pytest -m smoke)
+smoke:
+	$(PY) -m benchmarks.run --smoke
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-full:
+	REPRO_BENCH_FULL=1 $(PY) -m benchmarks.run

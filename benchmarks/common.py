@@ -23,6 +23,11 @@ FULL = os.environ.get("REPRO_BENCH_FULL") == "1"
 ENGINES = ["original", "pasv", "tikv", "dwisckey", "lsmraft", "nezha_nogc",
            "nezha"]
 
+# byte categories in which the VALUE itself hits disk (excludes 8B offsets);
+# single source of truth for fig4 and the smoke gate
+VALUE_CATS = {"raft_log", "wal", "flush", "compaction", "valuelog",
+              "wisckey_vlog", "sst_ship"}
+
 
 def make_cluster(engine: str, n: int = 3, seed: int = 7,
                  gc_threshold: int = 2 << 20) -> Cluster:

@@ -11,8 +11,7 @@ from benchmarks import common
 VALUE_SIZES = [1024, 4096, 16384] + ([65536] if common.FULL else [])
 N_BYTES_TARGET = (32 << 20) if common.FULL else (3 << 20)
 
-VALUE_CATS = {"raft_log", "wal", "flush", "compaction", "valuelog",
-              "wisckey_vlog", "sst_ship"}
+VALUE_CATS = common.VALUE_CATS
 
 
 def run(engines=None):

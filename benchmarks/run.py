@@ -4,6 +4,7 @@ table from the dry-run.  Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run            # quick mode
   REPRO_BENCH_FULL=1 ... python -m benchmarks.run    # ~10x sizes
   python -m benchmarks.run --only fig4,roofline
+  python -m benchmarks.run --smoke                   # tiny CI gate (tier-1)
 """
 from __future__ import annotations
 
@@ -12,16 +13,73 @@ import sys
 import time
 
 
+def smoke() -> int:
+    """Tiny all-engine gate runnable in the tier-1 time budget.
+
+    Asserts the two load-bearing claims survive the batching pipeline:
+      1. nezha writes no more value bytes per user byte than original
+         (the paper's >=3x -> 1x story),
+      2. group commit actually cuts fsyncs: batch=32 uses < 1/4 the fsyncs
+         of batch=1 on a small synced nezha run.
+    Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
+    """
+    from benchmarks import common
+    n, vsize = 96, 1024
+    wa = {}
+    print("name,us_per_call,derived")
+    for engine in common.ENGINES:
+        c = common.make_cluster(engine, gc_threshold=1 << 60)
+        items = common.keys_values(n, vsize)
+        dt, done = common.timed(c.put_many, items)
+        m, eng = common.leader_metrics(c)
+        wa[engine] = sum(v for k, v in m.write_bytes.items()
+                         if k in common.VALUE_CATS) / max(eng.user_bytes, 1)
+        print(f"smoke_put/{engine},{1e6 * dt / done:.2f},"
+              f"value_writes_x={wa[engine]:.2f}")
+        common.destroy(c)
+
+    from benchmarks.fig12_batching import _make_sync_cluster
+    fsyncs = {}
+    for batch in (1, 32):
+        c = _make_sync_cluster("nezha", batch)
+        items = common.keys_values(64, vsize)
+        dt, done = common.timed(c.put_many, items, window=64, batch=batch)
+        fsyncs[batch] = sum(mm.fsyncs for mm in c.metrics)
+        print(f"smoke_batch/nezha/b{batch},{1e6 * dt / done:.2f},"
+              f"fsyncs={fsyncs[batch]}")
+        common.destroy(c)
+
+    ok = True
+    if wa["nezha"] > wa["original"]:
+        print(f"smoke/FAIL,0,nezha_wa={wa['nezha']:.2f}_exceeds_"
+              f"original={wa['original']:.2f}")
+        ok = False
+    if fsyncs[32] * 4 > fsyncs[1]:
+        print(f"smoke/FAIL,0,batch32_fsyncs={fsyncs[32]}_not_under_quarter_"
+              f"of_batch1={fsyncs[1]}")
+        ok = False
+    if ok:
+        print(f"smoke/PASS,0,nezha_wa={wa['nezha']:.2f}"
+              f";original_wa={wa['original']:.2f}"
+              f";fsync_cut={fsyncs[1]}->{fsyncs[32]}")
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma-separated subset: fig4..fig11,roofline")
+                    help="comma-separated subset: fig4..fig12,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny all-engine assertion run (CI gate)")
     args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (common, fig4_put, fig5_get, fig6_scan,
                             fig7_scan_length, fig8_ycsb, fig9_scalability,
-                            fig10_gc_impact, fig11_recovery, roofline)
+                            fig10_gc_impact, fig11_recovery, fig12_batching,
+                            roofline)
 
     suites = {
         "fig4": lambda: fig4_put.run()[0],
@@ -32,6 +90,7 @@ def main() -> None:
         "fig9": fig9_scalability.run,
         "fig10": fig10_gc_impact.run,
         "fig11": fig11_recovery.run,
+        "fig12": fig12_batching.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

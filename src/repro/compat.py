@@ -1,0 +1,25 @@
+"""Version-compat shims for the installed jax (0.4.x through 0.6.x APIs).
+
+Every "jax renamed/moved X" fallback lives here so the next rename is a
+one-file fix: AxisType (absent before 0.5), shard_map (promoted to the
+top-level namespace in 0.6), pallas TPUCompilerParams -> CompilerParams.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+
+
+def pallas_compiler_params(pltpu):
+    """The pallas-TPU compiler-params class, old or new name.  Takes the
+    caller's pltpu module so importing this shim never pulls in pallas."""
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

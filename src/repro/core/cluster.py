@@ -24,7 +24,7 @@ class Cluster:
     def __init__(self, n: int = 3, engine: str = "nezha", workdir: str = "",
                  seed: int = 0, sync: bool = False, leader_hint: int = 0,
                  engine_kwargs: Optional[dict] = None, heartbeat_every: int = 5,
-                 election_timeout=(20, 40)):
+                 election_timeout=(20, 40), max_batch: int = 64):
         self.n = n
         self.engine_name = engine
         self.workdir = workdir
@@ -33,6 +33,7 @@ class Cluster:
         self.engine_kwargs = engine_kwargs or {}
         self.heartbeat_every = heartbeat_every
         self.election_timeout = election_timeout
+        self.max_batch = max_batch
         os.makedirs(workdir, exist_ok=True)
         self.net = SimNet(list(range(n)), seed=seed)
         self.metrics: List[Metrics] = [Metrics() for _ in range(n)]
@@ -58,8 +59,10 @@ class Cluster:
             eto = (eto[0] // 2, eto[0] // 2 + 2)
         node = RaftNode(
             i, list(range(self.n)), self.net, eng, eng.apply,
+            apply_batch_fn=getattr(eng, "apply_batch", None),
             seed=self.seed, election_timeout=eto,
             heartbeat_every=self.heartbeat_every,
+            max_batch=self.max_batch,
             snapshot_fn=eng.snapshot,
             install_snapshot_fn=getattr(eng, "install_snapshot", None))
         if isinstance(eng, NezhaEngine):
@@ -115,24 +118,35 @@ class Cluster:
                 return self.put(key, value, max_ticks)
         raise TimeoutError("put not committed")
 
-    def put_many(self, items, window: int = 64, max_ticks: int = 200000):
-        """Pipelined puts: keep up to `window` in flight."""
+    def put_many(self, items, window: int = 64, max_ticks: int = 200000,
+                 batch: Optional[int] = None):
+        """Pipelined group-committed puts: submit in `batch`-sized windows
+        (client_put_many => one buffered write + one fsync per window) and
+        keep up to `window` entries in flight."""
         ld = self.elect()
+        if batch is None:
+            batch = max(1, min(window, ld.max_batch))
         it = iter(items)
         pending: List[int] = []
         done = 0
         exhausted = False
         for _ in range(max_ticks):
             while not exhausted and len(pending) < window:
-                nxt = next(it, None)
-                if nxt is None:
-                    exhausted = True
+                chunk = []
+                room = min(batch, window - len(pending))
+                while len(chunk) < room:
+                    nxt = next(it, None)
+                    if nxt is None:
+                        exhausted = True
+                        break
+                    chunk.append(nxt)
+                if not chunk:
                     break
-                idx = ld.client_put(nxt[0], nxt[1])
-                if idx is None:
+                idxs = ld.client_put_many(chunk)
+                if idxs is None:           # leadership moved: re-elect, retry
                     ld = self.elect()
-                    idx = ld.client_put(nxt[0], nxt[1])
-                pending.append(idx)
+                    idxs = ld.client_put_many(chunk)
+                pending.extend(idxs)
             if pending:
                 self.tick()
                 applied = ld.last_applied

@@ -15,6 +15,23 @@ the paper couples/decouples the two layers:
               => exactly 1x value write; reads pay indirection
   Nezha       Nezha-NoGC + Raft-aware GC (sorted ValueLog + hash index) +
               three-phase request routing
+
+Batching / caching knobs (the group-commit I/O pipeline):
+
+  max_batch (RaftNode/Cluster, default 64)
+      Entries shipped per AppendEntries RPC AND the group-commit window:
+      client_put_many persists a whole window with one buffered write, and
+      commit_window() turns it into ONE fsync (per store) instead of one
+      per record.  benchmarks/fig12_batching.py sweeps this knob.
+  commit window (LogStoreBase.commit_window)
+      Invoked by Raft at batch boundaries: after client_put/client_put_many
+      on the leader, after the follower appends an AppendEntries batch
+      (before acking), and after each _apply_committed drain.  Engines
+      flush+fsync every dirty file exactly once per call.
+  cache_bytes (EngineBase, default 2 MiB)
+      Byte budget of the per-engine BlockCache shared by SSTable blocks,
+      SortedStore point records, and ValueLog offset reads.  Per-SSTable
+      bloom filters (cache-independent) skip files on point gets.
 """
 from __future__ import annotations
 
@@ -22,6 +39,7 @@ import json
 import os
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro.core.cache import BlockCache
 from repro.core.metrics import Metrics
 from repro.core.minilsm import MiniLSM
 from repro.core.raft import LogStoreBase
@@ -35,12 +53,14 @@ class EngineBase(LogStoreBase):
 
     def __init__(self, dirpath: str, metrics: Optional[Metrics] = None, *,
                  sync: bool = False,
-                 is_leader: Callable[[], bool] = lambda: True):
+                 is_leader: Callable[[], bool] = lambda: True,
+                 cache_bytes: int = 2 << 20):
         self.dir = dirpath
         os.makedirs(dirpath, exist_ok=True)
         self.metrics = metrics or Metrics()
         self.sync = sync
         self.is_leader = is_leader
+        self.cache = BlockCache(cache_bytes)
         self.user_bytes = 0
         self._meta_path = os.path.join(dirpath, "raft_meta.json")
 
@@ -56,6 +76,13 @@ class EngineBase(LogStoreBase):
         with open(self._meta_path) as f:
             m = json.load(f)
         return m["term"], m["voted_for"]
+
+    # -------------------------------------------------------- state machine
+    def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        """Apply one committed drain as a group; engines override to
+        coalesce their index/WAL writes.  Default: per-entry apply."""
+        for e, off in pairs:
+            self.apply(e, off)
 
     # --------------------------------------------------------- maintenance
     def post_op(self):
@@ -86,10 +113,12 @@ class OriginalEngine(EngineBase):
         super().__init__(dirpath, metrics, **kw)
         self.raft_vlog = ValueLog(os.path.join(dirpath, "raft.log"),
                                   self.metrics, category="raft_log",
-                                  sync=self.sync)
+                                  sync=self.sync, group_commit=True,
+                                  cache=self.cache)
         self._offsets: List[int] = []  # raft index (1-based) -> offset
         self.db = MiniLSM(os.path.join(dirpath, "db"), self.metrics,
-                          wal=self.wal, sync=self.sync)
+                          wal=self.wal, sync=self.sync, group_commit=True,
+                          cache=self.cache)
 
     # LogStore
     def append(self, entry: LogEntry) -> int:
@@ -100,6 +129,17 @@ class OriginalEngine(EngineBase):
             self._offsets[entry.index - 1:] = [off]
         return off
 
+    def append_batch(self, entries: List[LogEntry]) -> List[int]:
+        if not entries or entries[0].index != len(self._offsets) + 1:
+            return [self.append(e) for e in entries]   # rare truncation path
+        offs = self.raft_vlog.append_batch(entries)    # ONE buffered write
+        self._offsets.extend(offs)
+        return offs
+
+    def commit_window(self):
+        self.raft_vlog.sync_now()
+        self.db.sync_wal()
+
     def truncate_from(self, index: int):
         self.raft_vlog.truncate_to(self._offsets[index - 1])
         self._offsets = self._offsets[:index - 1]
@@ -108,6 +148,11 @@ class OriginalEngine(EngineBase):
     def apply(self, entry: LogEntry, offset: int):
         self.user_bytes += len(entry.key) + len(entry.value)
         self.db.put(entry.key, entry.value)
+
+    def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        for e, _ in pairs:
+            self.user_bytes += len(e.key) + len(e.value)
+        self.db.put_batch([(e.key, e.value) for e, _ in pairs])
 
     def get(self, key: bytes) -> Optional[bytes]:
         return self.db.get(key)
@@ -153,13 +198,16 @@ class DwisckeyEngine(EngineBase):
         super().__init__(dirpath, metrics, **kw)
         self.raft_vlog = ValueLog(os.path.join(dirpath, "raft.log"),
                                   self.metrics, category="raft_log",
-                                  sync=self.sync)
+                                  sync=self.sync, group_commit=True,
+                                  cache=self.cache)
         self._offsets: List[int] = []
         self.wisc_vlog = ValueLog(os.path.join(dirpath, "wisc_vlog.log"),
                                   self.metrics, category="wisckey_vlog",
-                                  sync=self.sync)
+                                  sync=self.sync, group_commit=True,
+                                  cache=self.cache)
         self.db = MiniLSM(os.path.join(dirpath, "db"), self.metrics,
-                          wal=True, sync=self.sync)
+                          wal=True, sync=self.sync, group_commit=True,
+                          cache=self.cache)
 
     def append(self, entry: LogEntry) -> int:
         off = self.raft_vlog.append(entry)
@@ -169,6 +217,18 @@ class DwisckeyEngine(EngineBase):
             self._offsets[entry.index - 1:] = [off]
         return off
 
+    def append_batch(self, entries: List[LogEntry]) -> List[int]:
+        if not entries or entries[0].index != len(self._offsets) + 1:
+            return [self.append(e) for e in entries]
+        offs = self.raft_vlog.append_batch(entries)
+        self._offsets.extend(offs)
+        return offs
+
+    def commit_window(self):
+        self.raft_vlog.sync_now()
+        self.wisc_vlog.sync_now()
+        self.db.sync_wal()
+
     def truncate_from(self, index: int):
         self.raft_vlog.truncate_to(self._offsets[index - 1])
         self._offsets = self._offsets[:index - 1]
@@ -177,6 +237,13 @@ class DwisckeyEngine(EngineBase):
         self.user_bytes += len(entry.key) + len(entry.value)
         voff = self.wisc_vlog.append(entry)       # second value write
         self.db.put(entry.key, pack_offset(voff))
+
+    def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        for e, _ in pairs:
+            self.user_bytes += len(e.key) + len(e.value)
+        voffs = self.wisc_vlog.append_batch([e for e, _ in pairs])
+        self.db.put_batch([(e.key, pack_offset(vo))
+                           for (e, _), vo in zip(pairs, voffs)])
 
     def get(self, key: bytes) -> Optional[bytes]:
         v = self.db.get(key)
@@ -211,7 +278,7 @@ class _ShippedLSM(MiniLSM):
 
     def compact(self):
         self.compaction_count += 1
-        from sortedcontainers import SortedDict
+        from repro.core.minilsm import SortedDict
         merged = SortedDict()
         for sst in self.l1 + self.l0:
             for k, v in sst.items():
@@ -220,7 +287,7 @@ class _ShippedLSM(MiniLSM):
         self._sst_seq += 1
         from repro.core.minilsm import SSTable
         new_l1 = SSTable.write(path, list(merged.items()), self.metrics,
-                               "sst_ship")
+                               "sst_ship", self.cache)
         for sst in self.l0 + self.l1:
             sst.delete()
         self.l0, self.l1 = [], [new_l1]
@@ -237,7 +304,8 @@ class LSMRaftEngine(OriginalEngine):
         if not self.is_leader():
             self.db.close()
             self.db = _ShippedLSM(os.path.join(dirpath, "db"), self.metrics,
-                                  wal=False, sync=self.sync)
+                                  wal=False, sync=self.sync,
+                                  group_commit=True, cache=self.cache)
 
 
 # =====================================================================
@@ -249,11 +317,18 @@ class NezhaNoGCEngine(EngineBase):
     def __init__(self, dirpath, metrics=None, **kw):
         super().__init__(dirpath, metrics, **kw)
         self.active = StorageModule(dirpath, self.metrics, "m0000",
-                                    sync=self.sync)
+                                    sync=self.sync, group_commit=True,
+                                    cache=self.cache)
 
     # LogStore: append == the one and only value persistence
     def append(self, entry: LogEntry) -> int:
         return self.active.vlog.append(entry)
+
+    def append_batch(self, entries: List[LogEntry]) -> List[int]:
+        return self.active.vlog.append_batch(entries)
+
+    def commit_window(self):
+        self.active.sync_now()
 
     def truncate_from(self, index: int):
         # offsets tracked by the raft node; scan to find (rare path)
@@ -266,6 +341,11 @@ class NezhaNoGCEngine(EngineBase):
     def apply(self, entry: LogEntry, offset: int):
         self.user_bytes += len(entry.key) + len(entry.value)
         self.active.apply(entry, offset)
+
+    def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        for e, _ in pairs:
+            self.user_bytes += len(e.key) + len(e.value)
+        self.active.apply_batch(pairs)
 
     def get(self, key: bytes) -> Optional[bytes]:
         return self.active.get(key)
@@ -302,7 +382,8 @@ class NezhaEngine(EngineBase):
         self.on_snapshot = on_snapshot  # callback(last_index, last_term)
         self.gen = 0
         self.active = StorageModule(dirpath, self.metrics,
-                                    f"m{self.gen:04d}", sync=self.sync)
+                                    f"m{self.gen:04d}", sync=self.sync,
+                                    group_commit=True, cache=self.cache)
         self.new: Optional[StorageModule] = None
         self.sorted: Optional[SortedStore] = None
         self.gc_started = False
@@ -327,6 +408,22 @@ class NezhaEngine(EngineBase):
         self._last_by_tag[mod.tag] = (entry.index, entry.term)
         return off
 
+    def append_batch(self, entries: List[LogEntry]) -> List[int]:
+        if not entries:
+            return []
+        mod = self._write_module()
+        offs = mod.vlog.append_batch(entries)      # ONE buffered write
+        for e in entries:
+            self._seg_of_index[e.index] = mod.tag
+        last = entries[-1]
+        self._last_by_tag[mod.tag] = (last.index, last.term)
+        return offs
+
+    def commit_window(self):
+        self.active.sync_now()
+        if self.new is not None:
+            self.new.sync_now()
+
     def truncate_from(self, index: int):
         mod = self._write_module()
         assert self._seg_of_index.get(index) in (None, mod.tag), \
@@ -339,17 +436,36 @@ class NezhaEngine(EngineBase):
 
     def apply(self, entry: LogEntry, offset: int):
         self.user_bytes += len(entry.key) + len(entry.value)
-        tag = self._seg_of_index.get(entry.index)
-        mod = self.new if (self.new is not None and tag == self.new.tag) \
-            else self.active
+        mod = self._module_of(entry.index)
         mod.apply(entry, offset)
         self._gc_last = (entry.index, entry.term)
 
-    def load_full_entry(self, index: int, offset: int) -> LogEntry:
+    def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        """Group apply; a batch may straddle the Active->New rotation, so
+        coalesce per consecutive-module run (order within the drain is
+        preserved)."""
+        run: List[Tuple[LogEntry, int]] = []
+        run_mod = None
+        for e, off in pairs:
+            self.user_bytes += len(e.key) + len(e.value)
+            mod = self._module_of(e.index)
+            if mod is not run_mod and run:
+                run_mod.apply_batch(run)
+                run = []
+            run_mod = mod
+            run.append((e, off))
+        if run:
+            run_mod.apply_batch(run)
+        last = pairs[-1][0]
+        self._gc_last = (last.index, last.term)
+
+    def _module_of(self, index: int) -> StorageModule:
         tag = self._seg_of_index.get(index)
-        mod = self.new if (self.new is not None and tag == self.new.tag) \
+        return self.new if (self.new is not None and tag == self.new.tag) \
             else self.active
-        return mod.vlog.read_at(offset)
+
+    def load_full_entry(self, index: int, offset: int) -> LogEntry:
+        return self._module_of(index).vlog.read_at(offset)
 
     # ------------------------------------------------------- three-phase
     def _chain(self) -> List:
@@ -394,8 +510,10 @@ class NezhaEngine(EngineBase):
         self._boundary = self._last_by_tag.get(self.active.tag, (0, 0))
         self.gen += 1
         self.new = StorageModule(self.dir, self.metrics, f"m{self.gen:04d}",
-                                 sync=self.sync)
-        self._building = SortedStore(self.dir, self.metrics, gen=self.gen)
+                                 sync=self.sync, group_commit=True,
+                                 cache=self.cache)
+        self._building = SortedStore(self.dir, self.metrics, gen=self.gen,
+                                     cache=self.cache)
         open(self._building.path, "wb").close()
         self._building._started = True
         with open(self._state_path, "w") as f:
@@ -497,15 +615,19 @@ class NezhaEngine(EngineBase):
         if state.get("started") and not state.get("complete"):
             # crashed mid-GC: resume from the interrupt point (§III-E)
             self.gen = gen
-            prev = SortedStore(self.dir, self.metrics, gen=gen - 1)
+            prev = SortedStore(self.dir, self.metrics, gen=gen - 1,
+                               cache=self.cache)
             self.sorted = prev if prev.load() else None
             self.active = StorageModule(self.dir, self.metrics,
-                                        f"m{gen - 1:04d}", sync=self.sync)
+                                        f"m{gen - 1:04d}", sync=self.sync,
+                                        group_commit=True, cache=self.cache)
             self.active.db.recover()
             self.new = StorageModule(self.dir, self.metrics,
-                                     f"m{gen:04d}", sync=self.sync)
+                                     f"m{gen:04d}", sync=self.sync,
+                                     group_commit=True, cache=self.cache)
             self.new.db.recover()
-            self._building = SortedStore(self.dir, self.metrics, gen=gen)
+            self._building = SortedStore(self.dir, self.metrics, gen=gen,
+                                         cache=self.cache)
             resume_key = self._building.last_key_on_disk()
             self._building._started = resume_key is not None
             if resume_key is not None:  # reload partial index
@@ -535,10 +657,12 @@ class NezhaEngine(EngineBase):
                 self._gc_iter = None  # barrier re-evaluated in gc_step
         else:
             self.gen = gen
-            cur = SortedStore(self.dir, self.metrics, gen=gen)
+            cur = SortedStore(self.dir, self.metrics, gen=gen,
+                              cache=self.cache)
             self.sorted = cur if cur.load() else None
             self.active = StorageModule(self.dir, self.metrics,
-                                        f"m{gen:04d}", sync=self.sync)
+                                        f"m{gen:04d}", sync=self.sync,
+                                        group_commit=True, cache=self.cache)
             self.active.db.recover()
             self.new = None
             self.gc_started = bool(state.get("started"))
@@ -586,8 +710,10 @@ class NezhaEngine(EngineBase):
         self._seg_of_index.clear()
         self.gen += 1
         self.active = StorageModule(self.dir, self.metrics,
-                                    f"m{self.gen:04d}", sync=self.sync)
-        store = SortedStore(self.dir, self.metrics, gen=self.gen)
+                                    f"m{self.gen:04d}", sync=self.sync,
+                                    group_commit=True, cache=self.cache)
+        store = SortedStore(self.dir, self.metrics, gen=self.gen,
+                            cache=self.cache)
         store.install_payload(payload, last_index, last_term)
         old = self.sorted
         self.sorted = store

@@ -21,6 +21,8 @@ class Metrics:
     write_ops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     read_ops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     fsyncs: int = 0
+    cache_hits: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    bloom_skips: int = 0
     latencies_us: Dict[str, List[float]] = field(
         default_factory=lambda: defaultdict(list))
 
@@ -34,6 +36,14 @@ class Metrics:
 
     def on_fsync(self):
         self.fsyncs += 1
+
+    def on_cache_hit(self, category: str):
+        """A read served from the block cache: zero disk bytes."""
+        self.cache_hits[category] += 1
+
+    def on_bloom_skip(self):
+        """A point get skipped an SSTable entirely via its bloom filter."""
+        self.bloom_skips += 1
 
     def record_latency(self, op: str, seconds: float):
         self.latencies_us[op].append(seconds * 1e6)
@@ -62,6 +72,8 @@ class Metrics:
             "write_ops": dict(self.write_ops),
             "read_ops": dict(self.read_ops),
             "fsyncs": self.fsyncs,
+            "cache_hits": dict(self.cache_hits),
+            "bloom_skips": self.bloom_skips,
             "latency": lat,
         }
 

@@ -76,6 +76,16 @@ class LogStoreBase:
     def append(self, entry: LogEntry) -> int:
         raise NotImplementedError
 
+    def append_batch(self, entries: List[LogEntry]) -> List[int]:
+        """Group-commit hook: persist a whole batch with one buffered write.
+        Engines override to coalesce; the default just loops."""
+        return [self.append(e) for e in entries]
+
+    def commit_window(self):
+        """Group-commit boundary: make everything appended/applied since the
+        last call durable with at most one fsync per underlying file.
+        Called by Raft BEFORE acknowledging a batch.  Default: no-op."""
+
     def truncate_from(self, index: int):
         raise NotImplementedError
 
@@ -87,10 +97,13 @@ class RaftNode:
     def __init__(self, nid: int, peers: List[int], net: SimNet,
                  log_store: LogStoreBase,
                  apply_fn: Callable[[LogEntry, int], None],
+                 apply_batch_fn: Optional[
+                     Callable[[List[Tuple[LogEntry, int]]], None]] = None,
                  *, seed: int = 0,
                  election_timeout: Tuple[int, int] = (20, 40),
                  heartbeat_every: int = 5,
                  max_entries_per_rpc: int = 64,
+                 max_batch: Optional[int] = None,
                  snapshot_fn: Optional[Callable[[], Optional[Tuple[int, int, Any]]]] = None,
                  install_snapshot_fn: Optional[Callable[[int, int, Any], None]] = None):
         self.nid = nid
@@ -98,12 +111,17 @@ class RaftNode:
         self.net = net
         self.store = log_store
         self.apply_fn = apply_fn
+        self.apply_batch_fn = apply_batch_fn
         self.snapshot_fn = snapshot_fn
         self.install_snapshot_fn = install_snapshot_fn
         self.rng = random.Random(seed * 7919 + nid)
         self.eto = election_timeout
         self.heartbeat_every = heartbeat_every
-        self.max_entries = max_entries_per_rpc
+        # max_batch governs BOTH entries-per-AppendEntries and the
+        # group-commit window (one fsync per window, see client_put_many);
+        # max_entries_per_rpc is its default when unset
+        self.max_batch = max_batch if max_batch is not None \
+            else max_entries_per_rpc
 
         self.current_term = 0
         self.voted_for: Optional[int] = None
@@ -176,10 +194,38 @@ class RaftNode:
         entry = LogEntry(self.current_term, self.last_log_index + 1,
                          KIND_PUT, key, value)
         off = self.store.append(entry)           # THE single persistence
+        self.store.commit_window()               # durable before ack
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
+        if not self.peers:                       # single-node: self-commit
+            self._advance_commit()
         return entry.index
+
+    def client_put_many(self, items: List[Tuple[bytes, bytes]]
+                        ) -> Optional[List[int]]:
+        """Leader-only group commit: the whole batch is persisted with one
+        buffered write + one fsync per store (append_batch/commit_window),
+        then shipped to followers immediately in max_batch-sized
+        AppendEntries instead of waiting for the next heartbeat."""
+        if self.role != LEADER:
+            return None
+        entries = []
+        base = self.last_log_index
+        for i, (key, value) in enumerate(items):
+            entries.append(LogEntry(self.current_term, base + 1 + i,
+                                    KIND_PUT, key, value))
+        offs = self.store.append_batch(entries)  # ONE persistence pass
+        self.store.commit_window()               # ONE fsync per store
+        self.entries.extend(entries)
+        self.offsets.extend(offs)
+        self.match_index[self.nid] = self.last_log_index
+        if not self.peers:                       # single-node: self-commit
+            self._advance_commit()
+        # eager dispatch: a full window should not wait for the heartbeat
+        self._broadcast_append()
+        self._next_heartbeat = self.net.time + self.heartbeat_every
+        return [e.index for e in entries]
 
     # -------------------------------------------------------------- tick
     def tick(self):
@@ -222,9 +268,12 @@ class RaftNode:
         entry = LogEntry(self.current_term, self.last_log_index + 1,
                          KIND_NOOP, b"", b"")
         off = self.store.append(entry)
+        self.store.commit_window()
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
+        if not self.peers:                       # single-node: self-commit
+            self._advance_commit()
         self._broadcast_append()
         self._next_heartbeat = self.net.time + self.heartbeat_every
 
@@ -248,7 +297,7 @@ class RaftNode:
         prev = ni - 1
         ents = [self._hydrated(i) for i in
                 range(ni, min(self.last_log_index,
-                              ni + self.max_entries - 1) + 1)]
+                              ni + self.max_batch - 1) + 1)]
         size = sum(len(e.key) + len(e.value) + 19 for e in ents)
         self.net.send(self.nid, peer, AppendEntries(
             self.current_term, self.nid, prev, self.term_at(prev), ents,
@@ -311,23 +360,31 @@ class RaftNode:
             self.net.send(self.nid, src, AppendEntriesReply(
                 self.current_term, False, self.snap_index))
             return
-        idx = m.prev_log_index
-        for e in m.entries:
-            idx += 1
-            if idx <= self.snap_index:
-                continue
+        # skip the prefix we already hold (snapshot-covered or term-matching)
+        start = 0
+        while start < len(m.entries):
+            idx = m.prev_log_index + 1 + start
+            if idx <= self.snap_index or \
+                    (idx <= self.last_log_index and
+                     self.term_at(idx) == m.entries[start].term):
+                start += 1
+            else:
+                break
+        if start < len(m.entries):
+            idx = m.prev_log_index + 1 + start
             if idx <= self.last_log_index:
-                if self.term_at(idx) == e.term:
-                    continue
-                # conflict: truncate our log from idx
+                # conflict: truncate our log from idx, once
                 keep = idx - self.snap_index - 1
                 if keep < len(self.offsets):
                     self.store.truncate_from(idx)
                 self.entries = self.entries[:keep]
                 self.offsets = self.offsets[:keep]
-            off = self.store.append(e)            # single persistence
-            self.entries.append(e)
-            self.offsets.append(off)
+            batch = m.entries[start:]
+            offs = self.store.append_batch(batch)  # single persistence pass
+            self.entries.extend(batch)
+            self.offsets.extend(offs)
+            self.store.commit_window()             # durable before the ack
+        idx = m.prev_log_index + len(m.entries)
         if m.leader_commit > self.commit_index:
             self.commit_index = min(m.leader_commit, self.last_log_index)
         self.net.send(self.nid, src, AppendEntriesReply(
@@ -349,7 +406,7 @@ class RaftNode:
                 self._send_append(src)
         else:
             self.next_index[src] = max(
-                1, min(self.next_index.get(src, 1) - self.max_entries,
+                1, min(self.next_index.get(src, 1) - self.max_batch,
                        m.match_index + 1))
             self._send_append(src)
 
@@ -364,6 +421,7 @@ class RaftNode:
         self._apply_committed()
 
     def _apply_committed(self):
+        batch: List[Tuple[LogEntry, int]] = []
         while self.last_applied < self.commit_index:
             self.last_applied += 1
             if self.last_applied <= self.snap_index:
@@ -371,8 +429,18 @@ class RaftNode:
             e = self.entry_at(self.last_applied)
             off = self.offsets[self.last_applied - self.snap_index - 1]
             if e.kind == KIND_PUT:
-                self.apply_fn(e, off)
+                batch.append((e, off))
             self.applied_log.append((self.last_applied, e))
+        if batch:
+            # whole drain applied as one group: engines coalesce the index
+            # WAL records into one buffered write...
+            if self.apply_batch_fn is not None:
+                self.apply_batch_fn(batch)
+            else:
+                for e, off in batch:
+                    self.apply_fn(e, off)
+            # ...and ONE fsync for the window, not one per entry
+            self.store.commit_window()
 
     # ----------------------------------------------------------- snapshot
     def compact_to(self, index: int, term: int):

@@ -16,9 +16,10 @@ import os
 import struct
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro.core.cache import BlockCache, next_namespace
 from repro.core.metrics import Metrics
 from repro.core.minilsm import MiniLSM
-from repro.core.valuelog import KIND_PUT, LogEntry, ValueLog
+from repro.core.valuelog import KIND_PUT, LogEntry, ValueLog, _HDR
 
 _OFF = struct.Struct("<Q")
 
@@ -35,18 +36,30 @@ class StorageModule:
     """ValueLog + lightweight key->offset index (the paper's 'RocksDB')."""
 
     def __init__(self, dirpath: str, metrics: Metrics, tag: str,
-                 sync: bool = False):
+                 sync: bool = False, group_commit: bool = False,
+                 cache: Optional[BlockCache] = None):
         self.dir = dirpath
         self.tag = tag
         self.metrics = metrics
         self.vlog = ValueLog(os.path.join(dirpath, f"valuelog_{tag}.log"),
-                             metrics, category="valuelog", sync=sync)
+                             metrics, category="valuelog", sync=sync,
+                             group_commit=group_commit, cache=cache)
         self.db = MiniLSM(os.path.join(dirpath, f"db_{tag}"), metrics,
-                          wal=True, name=f"db_{tag}", sync=sync)
+                          wal=True, name=f"db_{tag}", sync=sync,
+                          group_commit=group_commit, cache=cache)
 
     def apply(self, entry: LogEntry, offset: int):
         """State-machine apply: store ONLY the offset (Algorithm 1 line 7)."""
         self.db.put(entry.key, pack_offset(offset))
+
+    def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        """Group apply: all offset records become one buffered WAL write."""
+        self.db.put_batch([(e.key, pack_offset(off)) for e, off in pairs])
+
+    def sync_now(self):
+        """Commit-window boundary: one fsync each for vlog + index WAL."""
+        self.vlog.sync_now()
+        self.db.sync_wal()
 
     def get_offset(self, key: bytes) -> Optional[int]:
         v = self.db.get(key)
@@ -83,11 +96,17 @@ class SortedStore:
     """Final Compacted Storage: key-ordered ValueLog + hash index + snapshot
     metadata.  A range scan costs one hash lookup + one sequential read."""
 
-    def __init__(self, dirpath: str, metrics: Metrics, gen: int = 0):
+    # stream-decode chunk size: bounds memory on the recovery/GC paths
+    CHUNK_BYTES = 1 << 20
+
+    def __init__(self, dirpath: str, metrics: Metrics, gen: int = 0,
+                 cache: Optional[BlockCache] = None):
         self.dir = dirpath
         os.makedirs(dirpath, exist_ok=True)
         self.metrics = metrics
         self.gen = gen
+        self.cache = cache
+        self._cache_ns = next_namespace()
         self.path = os.path.join(dirpath, f"sorted_{gen:04d}.log")
         self.meta_path = os.path.join(dirpath, f"sorted_{gen:04d}.meta")
         self.index: Dict[bytes, Tuple[int, int]] = {}  # key -> (off, len)
@@ -95,6 +114,47 @@ class SortedStore:
         self.last_index = 0
         self.last_term = 0
         self._complete = False
+        self._rf = None   # persistent read handle, opened lazily
+
+    def _reset_read_state(self):
+        """File bytes changed (build/install/destroy): drop handle + cache."""
+        if self._rf is not None:
+            self._rf.close()
+            self._rf = None
+        if self.cache is not None:
+            self.cache.invalidate(self._cache_ns)
+            self._cache_ns = next_namespace()
+
+    def _stream_records(self, category: Optional[str] = None
+                        ) -> Iterator[Tuple[int, LogEntry]]:
+        """Chunked sequential decode of (offset, entry); never materializes
+        the whole file.  Bytes consumed are accounted to `category` exactly
+        as the old whole-file read was (same totals, chunked ops)."""
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, "rb") as f:
+            buf = b""
+            base = 0          # file offset of buf[0]
+            while True:
+                chunk = f.read(self.CHUNK_BYTES)
+                if chunk and category is not None:
+                    self.metrics.on_read(category, len(chunk))
+                if not chunk and not buf:
+                    return
+                buf += chunk
+                off = 0
+                while off + _HDR.size <= len(buf):
+                    _, _, _, _, klen, vlen = _HDR.unpack_from(buf, off)
+                    rlen = _HDR.size + klen + vlen
+                    if off + rlen > len(buf):
+                        break
+                    entry, _ = LogEntry.decode(buf, off)
+                    yield base + off, entry
+                    off += rlen
+                base += off
+                buf = buf[off:]
+                if not chunk:
+                    return  # EOF; leftover buf is a torn tail, tolerated
 
     # --------------------------------------------------------------- build
     def build(self, items: Iterator[Tuple[bytes, LogEntry]],
@@ -105,6 +165,7 @@ class SortedStore:
         resume_after: crash-recovery interrupt point (skip keys <= it).
         interleave: optional callback run between entries (models async GC).
         """
+        self._reset_read_state()
         mode = "ab" if resume_after is not None else "wb"
         with open(self.path, mode) as f:
             off = f.tell()
@@ -128,43 +189,37 @@ class SortedStore:
         self.metrics.on_write("gc_meta", 64)
 
     def last_key_on_disk(self) -> Optional[bytes]:
-        """Crash-resume support: scan the partial file for its last key."""
-        if not os.path.exists(self.path):
-            return None
+        """Crash-resume support: stream the partial file for its last key
+        (chunked — the old implementation slurped the whole file)."""
         last = None
-        with open(self.path, "rb") as f:
-            buf = f.read()
-        self.metrics.on_read("gc_resume_scan", len(buf))
-        off = 0
-        while off < len(buf):
-            try:
-                entry, nxt = LogEntry.decode(buf, off)
-            except Exception:
-                break  # torn tail
-            last = entry.key
-            off = nxt
+        try:
+            for _, entry in self._stream_records("gc_resume_scan"):
+                last = entry.key
+        except Exception:
+            pass  # torn/corrupt tail: resume from the last good key
         return last
 
     def load(self) -> bool:
-        """Recovery: reload index from the sorted file + meta."""
+        """Recovery: reload index from the sorted file + meta, streaming in
+        CHUNK_BYTES pieces; byte totals match the old whole-file read."""
         if not os.path.exists(self.meta_path):
             return False
+        if not os.path.exists(self.path):
+            # meta without data = real loss; fail loudly (silently loading
+            # an empty index would make every GC'd key vanish)
+            raise FileNotFoundError(self.path)
         with open(self.meta_path) as f:
             meta = json.load(f)
         self.last_index = meta["last_index"]
         self.last_term = meta["last_term"]
         self.index.clear()
         self.keys = []
-        with open(self.path, "rb") as f:
-            buf = f.read()
-        self.metrics.on_read("recover_sorted", len(buf))
-        off = 0
-        while off < len(buf):
-            entry, nxt = LogEntry.decode(buf, off)
-            self.index[entry.key] = (off, nxt - off)
+        for off, entry in self._stream_records("recover_sorted"):
+            self.index[entry.key] = (
+                off, _HDR.size + len(entry.key) + len(entry.value))
             self.keys.append(entry.key)
-            off = nxt
         self._complete = True
+        self._reset_read_state()
         return True
 
     # --------------------------------------------------------------- reads
@@ -172,10 +227,19 @@ class SortedStore:
         loc = self.index.get(key)          # hash index: direct lookup
         if loc is None:
             return None
-        with open(self.path, "rb") as f:
-            f.seek(loc[0])
-            buf = f.read(loc[1])
+        if self.cache is not None:
+            buf = self.cache.get(self._cache_ns, loc[0])
+            if buf is not None:
+                self.metrics.on_cache_hit("sorted_point")
+                entry, _ = LogEntry.decode(buf, 0)
+                return entry.value
+        if self._rf is None:
+            self._rf = open(self.path, "rb")
+        self._rf.seek(loc[0])
+        buf = self._rf.read(loc[1])
         self.metrics.on_read("sorted_point", len(buf))
+        if self.cache is not None:
+            self.cache.put(self._cache_ns, loc[0], buf)
         entry, _ = LogEntry.decode(buf, 0)
         return entry.value
 
@@ -188,9 +252,10 @@ class SortedStore:
             return []
         start = self.index[self.keys[i]][0]
         end_off, end_len = self.index[self.keys[j - 1]]
-        with open(self.path, "rb") as f:
-            f.seek(start)
-            buf = f.read(end_off + end_len - start)
+        if self._rf is None:
+            self._rf = open(self.path, "rb")
+        self._rf.seek(start)
+        buf = self._rf.read(end_off + end_len - start)
         self.metrics.on_read("sorted_range", len(buf))
         out, off = [], 0
         while off < len(buf):
@@ -199,14 +264,8 @@ class SortedStore:
         return out
 
     def items(self) -> Iterator[Tuple[bytes, LogEntry]]:
-        with open(self.path, "rb") as f:
-            buf = f.read()
-        self.metrics.on_read("gc_merge_read", len(buf))
-        off = 0
-        while off < len(buf):
-            entry, nxt = LogEntry.decode(buf, off)
+        for _, entry in self._stream_records("gc_merge_read"):
             yield entry.key, entry
-            off = nxt
 
     def snapshot_payload(self) -> bytes:
         """Whole sorted file — Raft InstallSnapshot payload for catch-up."""
@@ -217,6 +276,7 @@ class SortedStore:
 
     def install_payload(self, payload: bytes, last_index: int,
                         last_term: int):
+        self._reset_read_state()
         with open(self.path, "wb") as f:
             f.write(payload)
         self.metrics.on_write("snapshot_install", len(payload))
@@ -226,6 +286,7 @@ class SortedStore:
         self.load()
 
     def destroy(self):
+        self._reset_read_state()
         for p in (self.path, self.meta_path):
             if os.path.exists(p):
                 os.remove(p)

@@ -10,14 +10,22 @@ everything else stays intra-pod.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType  # None when the installed jax lacks it
+
+
+def mesh_axis_kwargs(n_axes: int) -> dict:
+    """kwargs for jax.make_mesh that request Auto axes when the installed
+    jax supports explicit axis types, and nothing otherwise."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
@@ -25,4 +33,4 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+                         **mesh_axis_kwargs(2))

@@ -1,0 +1,116 @@
+"""Deterministic fallback for the `hypothesis` API surface our tests use.
+
+The container image does not ship hypothesis; rather than skip the Raft
+safety properties (they are the paper's §III-E verification analogue) we
+replay each @given test over `max_examples` seeded pseudo-random draws.
+Strictly weaker than real hypothesis (no shrinking, no coverage guidance)
+but the fault schedules are reproducible and genuinely adversarial.
+
+Only the strategies used in tests/ are implemented:
+  integers, sampled_from, one_of, tuples, just, lists, binary.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+import random
+from typing import Any, Callable, List
+
+
+class HealthCheck(enum.Enum):
+    data_too_large = 1
+    filter_too_much = 2
+    too_slow = 3
+    function_scoped_fixture = 4
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+    @staticmethod
+    def one_of(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda r: r.choice(strats).example(r))
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda r: tuple(s.example(r) for s in strats))
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda r: value)
+
+    @staticmethod
+    def lists(strat: _Strategy, min_size: int = 0,
+              max_size: int = 16) -> _Strategy:
+        def draw(r: random.Random) -> List[Any]:
+            n = r.randint(min_size, max_size)
+            return [strat.example(r) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 16) -> _Strategy:
+        def draw(r: random.Random) -> bytes:
+            n = r.randint(min_size, max_size)
+            return bytes(r.getrandbits(8) for _ in range(n))
+        return _Strategy(draw)
+
+
+def given(*strat_args: _Strategy, **strat_kwargs: _Strategy):
+    def deco(fn):
+        # like real hypothesis, positional strategies bind to the RIGHTMOST
+        # parameters (leading params stay free for pytest fixtures)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        pos_names = [p.name for p in params[len(params) - len(strat_args):]] \
+            if strat_args else []
+        strategies_by_name = dict(zip(pos_names, strat_args))
+        strategies_by_name.update(strat_kwargs)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_minihyp_max_examples", 10)
+            for i in range(n):
+                rng = random.Random(0xC0FFEE + i * 101)
+                drawn = {k: s.example(rng)
+                         for k, s in strategies_by_name.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"minihyp example {i}/{n} failed with inputs "
+                        f"{drawn!r}") from e
+        if not hasattr(wrapper, "_minihyp_max_examples"):
+            # functools.wraps already copied the attr when @settings sits
+            # below @given; only default when no settings were applied
+            wrapper._minihyp_max_examples = 10
+        # hide strategy-filled params from pytest's fixture resolution
+        remaining = [p for p in params if p.name not in strategies_by_name]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 10, deadline=None,
+             suppress_health_check=None, **_ignored):
+    def deco(fn):
+        fn._minihyp_max_examples = max_examples
+        return fn
+    return deco

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback
+    from repro.testing.minihyp import (HealthCheck, given, settings,
+                                       strategies as st)
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.kv_compaction.ops import compact_kv_pool

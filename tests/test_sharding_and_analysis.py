@@ -54,13 +54,13 @@ def test_analyzer_nested_scans():
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import mesh_axis_kwargs
+    return jax.make_mesh((1, 1), ("data", "model"), **mesh_axis_kwargs(2))
 
 
 def test_fit_spec_drops_indivisible_axes():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import mesh_axis_kwargs
+    mesh = jax.make_mesh((1,), ("data",), **mesh_axis_kwargs(1))
     assert fit_spec((7,), P("data"), mesh) == P("data")  # 7 % 1 == 0
     # batch=1 cannot shard over a >1 axis — simulated via spec entries
     rules = make_rules(_mesh())
@@ -80,12 +80,12 @@ def test_param_spec_routing():
 SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"  # 8 host devices, never real TPU
     import jax, jax.numpy as jnp, json
-    from jax.sharding import AxisType
     from repro.configs import get, ShapeConfig
+    from repro.launch.mesh import mesh_axis_kwargs
     from repro.launch.steps import make_train_step, make_init_fn, input_specs
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((4, 2), ("data", "model"), **mesh_axis_kwargs(2))
     out = {}
     for arch in ["smollm_135m", "olmoe_1b_7b", "zamba2_1p2b"]:
         cfg = get(arch, smoke=True)

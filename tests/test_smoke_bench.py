@@ -1,0 +1,10 @@
+"""`pytest -m smoke` target wrapping benchmarks/run.py --smoke: every engine
+sustains puts through the batched pipeline, nezha beats original on value
+write bytes, and group commit cuts fsyncs."""
+import pytest
+
+
+@pytest.mark.smoke
+def test_smoke_benchmark_gate():
+    from benchmarks.run import smoke
+    assert smoke() == 0

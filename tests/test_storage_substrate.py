@@ -3,7 +3,11 @@ import os
 import tempfile
 
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback
+    from repro.testing.minihyp import (HealthCheck, given, settings,
+                                       strategies as st)
 
 from repro.core.metrics import Metrics
 from repro.core.minilsm import MiniLSM
