@@ -83,5 +83,36 @@ def emit(rows: List[Tuple[str, float, str]]):
         print(f"{name},{us:.2f},{derived}")
 
 
+def parse_derived(derived: str) -> Dict[str, object]:
+    """'ops_s=997;gc_cycles=3' -> {'ops_s': 997.0, 'gc_cycles': 3.0}; non-
+    numeric fields pass through as strings."""
+    out: Dict[str, object] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def write_artifact(fig: str, rows: List[Tuple[str, float, str]],
+                   extra: Dict[str, object] = None) -> str:
+    """Persist one figure's results as BENCH_<fig>.json at the repo root so
+    the perf trajectory is tracked (and diffed) across PRs."""
+    import json
+    path = os.path.join(os.path.dirname(__file__), "..", f"BENCH_{fig}.json")
+    doc = {"fig": fig, "full": FULL,
+           "rows": [{"name": n, "us_per_call": round(us, 2),
+                     "derived": parse_derived(d)} for n, us, d in rows]}
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    return os.path.abspath(path)
+
+
 def destroy(c: Cluster):
     c.destroy()

@@ -11,29 +11,44 @@ from benchmarks import common
 
 VSIZE = 4096
 N = 1200 if common.FULL else 600
-GC_THRESHOLD = (N // 3) * VSIZE  # two GC triggers over the run
 WINDOW = 50
 
 
-def run(engines=None):
+def run(engines=None, n=None, vsize=None, gc_threshold=None):
+    n = n or N
+    vsize = vsize or VSIZE
+    gc_threshold = gc_threshold or (n // 3) * vsize
     rows = []
     for engine in engines or ["original", "nezha_nogc", "nezha"]:
-        c = common.make_cluster(engine, gc_threshold=GC_THRESHOLD)
-        items = common.keys_values(N, VSIZE)
+        c = common.make_cluster(engine, gc_threshold=gc_threshold)
+        items = common.keys_values(n, vsize)
         stamps = []
         t0 = time.perf_counter()
-        for i in range(0, N, WINDOW):
+        for i in range(0, n, WINDOW):
             c.put_many(items[i:i + WINDOW])
             stamps.append(time.perf_counter() - t0)
-        eng = c.engines[c.elect().nid]
+        ld = c.elect()
+        eng = c.engines[ld.nid]
         gcs = getattr(eng, "gc_count", 0)
         # throughput in each window; report min/mean ratio (GC dips)
         import numpy as np
         widths = np.diff([0.0] + stamps)
         thr = WINDOW / widths
-        rows.append((f"fig10_gc/{engine}", 1e6 * stamps[-1] / N,
-                     f"ops_s={N / stamps[-1]:.0f};min_window_ops_s="
-                     f"{thr.min():.0f};gc_cycles={gcs}"))
+        derived = (f"ops_s={n / stamps[-1]:.0f};min_window_ops_s="
+                   f"{thr.min():.0f};gc_cycles={gcs}")
+        if engine == "nezha":
+            # leveled-GC evidence: flat per-cycle flush cost + total GC
+            # write amplification (monolithic GC grew per cycle)
+            m = c.metrics[ld.nid]
+            flushes = m.gc_flush_bytes_per_cycle()
+            if flushes:
+                derived += (f";gc_flush_first={flushes[0]}"
+                            f";gc_flush_last={flushes[-1]}")
+            derived += (f";gc_bytes={m.gc_total_bytes()}"
+                        f";gc_wa={m.gc_write_amplification(eng.user_bytes):.2f}"
+                        f";runs={len(eng.leveled.runs)}"
+                        f";levels={len(eng.leveled.level_shape())}")
+        rows.append((f"fig10_gc/{engine}", 1e6 * stamps[-1] / n, derived))
         common.destroy(c)
     return rows
 

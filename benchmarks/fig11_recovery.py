@@ -25,7 +25,7 @@ def _recover_time(engine: str, stage: str) -> float:
             eng.gc_step(64)           # partial progress
         elif stage == "post":
             if not (eng.gc_started and not eng.gc_completed):
-                if eng.gc_completed and eng.sorted is None:
+                if eng.gc_completed and not eng.leveled.runs:
                     eng.start_gc()
             eng.run_gc_to_completion()
     victim = c.elect().nid

@@ -16,16 +16,24 @@ import time
 def smoke() -> int:
     """Tiny all-engine gate runnable in the tier-1 time budget.
 
-    Asserts the two load-bearing claims survive the batching pipeline:
+    Asserts the three load-bearing claims survive the pipeline:
       1. nezha writes no more value bytes per user byte than original
          (the paper's >=3x -> 1x story),
       2. group commit actually cuts fsyncs: batch=32 uses < 1/4 the fsyncs
-         of batch=1 on a small synced nezha run.
+         of batch=1 on a small synced nezha run,
+      3. leveled GC (fig10 at smoke scale) keeps per-cycle flush work flat
+         while sustaining puts through multiple GC cycles.
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
     n, vsize = 96, 1024
     wa = {}
+    rows = []
+
+    def show(name, us, derived):
+        rows.append((name, us, derived))
+        print(f"{name},{us:.2f},{derived}")
+
     print("name,us_per_call,derived")
     for engine in common.ENGINES:
         c = common.make_cluster(engine, gc_threshold=1 << 60)
@@ -34,8 +42,8 @@ def smoke() -> int:
         m, eng = common.leader_metrics(c)
         wa[engine] = sum(v for k, v in m.write_bytes.items()
                          if k in common.VALUE_CATS) / max(eng.user_bytes, 1)
-        print(f"smoke_put/{engine},{1e6 * dt / done:.2f},"
-              f"value_writes_x={wa[engine]:.2f}")
+        show(f"smoke_put/{engine}", 1e6 * dt / done,
+             f"value_writes_x={wa[engine]:.2f}")
         common.destroy(c)
 
     from benchmarks.fig12_batching import _make_sync_cluster
@@ -45,23 +53,44 @@ def smoke() -> int:
         items = common.keys_values(64, vsize)
         dt, done = common.timed(c.put_many, items, window=64, batch=batch)
         fsyncs[batch] = sum(mm.fsyncs for mm in c.metrics)
-        print(f"smoke_batch/nezha/b{batch},{1e6 * dt / done:.2f},"
-              f"fsyncs={fsyncs[batch]}")
+        show(f"smoke_batch/nezha/b{batch}", 1e6 * dt / done,
+             f"fsyncs={fsyncs[batch]}")
         common.destroy(c)
+
+    # fig10 at smoke scale: multiple GC cycles, leveled evidence in derived
+    from benchmarks import fig10_gc_impact
+    gc_rows = fig10_gc_impact.run(engines=["nezha"], n=150, vsize=1024,
+                                  gc_threshold=30 << 10)
+    for name, us, derived in gc_rows:
+        show(name.replace("fig10_gc", "smoke_gc"), us, derived)
+    gc_stats = common.parse_derived(gc_rows[0][2])
 
     ok = True
     if wa["nezha"] > wa["original"]:
-        print(f"smoke/FAIL,0,nezha_wa={wa['nezha']:.2f}_exceeds_"
-              f"original={wa['original']:.2f}")
+        show("smoke/FAIL", 0, f"nezha_wa={wa['nezha']:.2f}_exceeds_"
+             f"original={wa['original']:.2f}")
         ok = False
     if fsyncs[32] * 4 > fsyncs[1]:
-        print(f"smoke/FAIL,0,batch32_fsyncs={fsyncs[32]}_not_under_quarter_"
-              f"of_batch1={fsyncs[1]}")
+        show("smoke/FAIL", 0, f"batch32_fsyncs={fsyncs[32]}_not_under_"
+             f"quarter_of_batch1={fsyncs[1]}")
+        ok = False
+    if gc_stats.get("gc_cycles", 0) < 2:
+        show("smoke/FAIL", 0, f"leveled_gc_never_cycled={gc_stats}")
+        ok = False
+    if gc_stats.get("gc_flush_last", 0) > \
+            2.5 * max(gc_stats.get("gc_flush_first", 0), 1):
+        show("smoke/FAIL", 0, "gc_flush_cost_grew_with_store_size="
+             f"{gc_stats.get('gc_flush_first')}->"
+             f"{gc_stats.get('gc_flush_last')}")
         ok = False
     if ok:
-        print(f"smoke/PASS,0,nezha_wa={wa['nezha']:.2f}"
-              f";original_wa={wa['original']:.2f}"
-              f";fsync_cut={fsyncs[1]}->{fsyncs[32]}")
+        show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
+             f";original_wa={wa['original']:.2f}"
+             f";fsync_cut={fsyncs[1]}->{fsyncs[32]}"
+             f";gc_cycles={gc_stats.get('gc_cycles'):.0f}"
+             f";gc_flush={gc_stats.get('gc_flush_first'):.0f}->"
+             f"{gc_stats.get('gc_flush_last'):.0f}")
+    common.write_artifact("smoke", rows)
     return 0 if ok else 1
 
 
@@ -102,6 +131,8 @@ def main() -> None:
         try:
             rows = fn()
             common.emit(rows)
+            path = common.write_artifact(name, rows)
+            print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # a failed suite must not hide the others
             print(f"{name}/SUITE_ERROR,0,{e!r}")
         print(f"# {name} done in {time.time() - t1:.1f}s", file=sys.stderr)

@@ -35,6 +35,17 @@ class BloomFilter:
         self.k = n_hashes
         self._bits = bytearray((self.m + 7) // 8)
 
+    @classmethod
+    def from_keys(cls, keys, bits_per_key: int = 10,
+                  n_hashes: int = 7) -> "BloomFilter":
+        """Build a filter sized for `keys` (per-sorted-run point-get gate:
+        a negative membership test skips the run with zero I/O)."""
+        keys = list(keys)
+        bf = cls(len(keys), bits_per_key, n_hashes)
+        for k in keys:
+            bf.add(k)
+        return bf
+
     def _probes(self, key: bytes):
         h1 = zlib.crc32(key)
         h2 = zlib.adler32(key) | 1      # odd => cycles through all slots

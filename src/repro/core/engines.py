@@ -43,7 +43,8 @@ from repro.core.cache import BlockCache
 from repro.core.metrics import Metrics
 from repro.core.minilsm import MiniLSM
 from repro.core.raft import LogStoreBase
-from repro.core.storage import (SortedStore, StorageModule, pack_offset,
+from repro.core.storage import (LeveledStore, SortedRun, StorageModule,
+                                kway_merge_newest_wins, pack_offset,
                                 unpack_offset)
 from repro.core.valuelog import KIND_PUT, LogEntry, ValueLog
 
@@ -150,6 +151,8 @@ class OriginalEngine(EngineBase):
         self.db.put(entry.key, entry.value)
 
     def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        if not pairs:
+            return
         for e, _ in pairs:
             self.user_bytes += len(e.key) + len(e.value)
         self.db.put_batch([(e.key, e.value) for e, _ in pairs])
@@ -239,6 +242,8 @@ class DwisckeyEngine(EngineBase):
         self.db.put(entry.key, pack_offset(voff))
 
     def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        if not pairs:
+            return
         for e, _ in pairs:
             self.user_bytes += len(e.key) + len(e.value)
         voffs = self.wisc_vlog.append_batch([e for e, _ in pairs])
@@ -319,30 +324,36 @@ class NezhaNoGCEngine(EngineBase):
         self.active = StorageModule(dirpath, self.metrics, "m0000",
                                     sync=self.sync, group_commit=True,
                                     cache=self.cache)
+        self._off_of_index: Dict[int, int] = {}   # raft index -> vlog offset
 
     # LogStore: append == the one and only value persistence
     def append(self, entry: LogEntry) -> int:
-        return self.active.vlog.append(entry)
+        off = self.active.vlog.append(entry)
+        self._off_of_index[entry.index] = off
+        return off
 
     def append_batch(self, entries: List[LogEntry]) -> List[int]:
-        return self.active.vlog.append_batch(entries)
+        offs = self.active.vlog.append_batch(entries)
+        for e, off in zip(entries, offs):
+            self._off_of_index[e.index] = off
+        return offs
 
     def commit_window(self):
         self.active.sync_now()
 
     def truncate_from(self, index: int):
-        # offsets tracked by the raft node; scan to find (rare path)
-        for off, e in self.active.vlog.scan():
-            if e.index == index:
-                self.active.vlog.truncate_to(off)
-                return
-        raise KeyError(index)
+        off = self._off_of_index[index]           # direct lookup, O(1)
+        self.active.vlog.truncate_to(off)
+        self._off_of_index = {i: o for i, o in self._off_of_index.items()
+                              if i < index}
 
     def apply(self, entry: LogEntry, offset: int):
         self.user_bytes += len(entry.key) + len(entry.value)
         self.active.apply(entry, offset)
 
     def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):
+        if not pairs:
+            return
         for e, _ in pairs:
             self.user_bytes += len(e.key) + len(e.value)
         self.active.apply_batch(pairs)
@@ -360,6 +371,7 @@ class NezhaNoGCEngine(EngineBase):
         for off, e in self.active.vlog.scan_headers():
             entries.append(e)
             offsets.append(off)
+            self._off_of_index[e.index] = off
         return entries, offsets, 0, 0
 
     def load_full_entry(self, index: int, offset: int) -> LogEntry:
@@ -370,30 +382,44 @@ class NezhaNoGCEngine(EngineBase):
 
 
 class NezhaEngine(EngineBase):
-    """Full Nezha: KVS-Raft + Raft-aware GC + three-phase request routing
-    (paper Algorithms 1-3, Table I)."""
+    """Full Nezha: KVS-Raft + Raft-aware leveled GC + three-phase request
+    routing (paper Algorithms 1-3, Table I, §III-D).
+
+    GC of the active segment seals a new L0 run in the LeveledStore
+    (bounded work per cycle — O(active segment), independent of total
+    data); when a level accumulates `level_fanout` runs they merge,
+    incrementally, into one run on the next level.  Reads stream through
+    a k-way newest-wins heap over (New, Active, runs newest-first); point
+    gets are bloom-gated per run."""
     name = "nezha"
 
     def __init__(self, dirpath, metrics=None, *, gc_threshold: int = 32 << 20,
-                 gc_batch: int = 64, on_snapshot=None, **kw):
+                 gc_batch: int = 64, level_fanout: int = 4,
+                 on_snapshot=None, **kw):
         super().__init__(dirpath, metrics, **kw)
         self.gc_threshold = gc_threshold
         self.gc_batch = gc_batch
+        self.level_fanout = level_fanout
         self.on_snapshot = on_snapshot  # callback(last_index, last_term)
         self.gen = 0
         self.active = StorageModule(dirpath, self.metrics,
                                     f"m{self.gen:04d}", sync=self.sync,
                                     group_commit=True, cache=self.cache)
         self.new: Optional[StorageModule] = None
-        self.sorted: Optional[SortedStore] = None
+        self.leveled = LeveledStore(dirpath, self.metrics, cache=self.cache,
+                                    fanout=level_fanout)
         self.gc_started = False
         self.gc_completed = True  # no GC yet
         self.gc_count = 0
         self._state_path = os.path.join(dirpath, "gc_state.json")
-        self._seg_of_index: Dict[int, str] = {}
+        # raft index -> (segment tag, vlog offset): one map serves both
+        # module routing and O(1) truncation
+        self._seg_of_index: Dict[int, Tuple[str, int]] = {}
         self._gc_iter: Optional[Iterator] = None
         self._gc_last: Tuple[int, int] = (0, 0)     # last APPLIED (idx, term)
-        self._building: Optional[SortedStore] = None
+        self._building: Optional[SortedRun] = None
+        self._cycle_bytes = 0                       # L0 bytes this cycle
+        self._merge: Optional[dict] = None          # in-flight level merge
         self._last_by_tag: Dict[str, Tuple[int, int]] = {}
         self._boundary: Tuple[int, int] = (0, 0)    # GC snapshot point
 
@@ -404,7 +430,7 @@ class NezhaEngine(EngineBase):
     def append(self, entry: LogEntry) -> int:
         mod = self._write_module()
         off = mod.vlog.append(entry)
-        self._seg_of_index[entry.index] = mod.tag
+        self._seg_of_index[entry.index] = (mod.tag, off)
         self._last_by_tag[mod.tag] = (entry.index, entry.term)
         return off
 
@@ -413,8 +439,8 @@ class NezhaEngine(EngineBase):
             return []
         mod = self._write_module()
         offs = mod.vlog.append_batch(entries)      # ONE buffered write
-        for e in entries:
-            self._seg_of_index[e.index] = mod.tag
+        for e, off in zip(entries, offs):
+            self._seg_of_index[e.index] = (mod.tag, off)
         last = entries[-1]
         self._last_by_tag[mod.tag] = (last.index, last.term)
         return offs
@@ -426,13 +452,21 @@ class NezhaEngine(EngineBase):
 
     def truncate_from(self, index: int):
         mod = self._write_module()
-        assert self._seg_of_index.get(index) in (None, mod.tag), \
+        tag, off = self._seg_of_index[index]       # direct lookup, O(1)
+        assert tag == mod.tag, \
             "conflict truncation across GC segments is not supported"
-        for off, e in mod.vlog.scan():
-            if e.index == index:
-                mod.vlog.truncate_to(off)
-                return
-        raise KeyError(index)
+        mod.vlog.truncate_to(off)
+        self._seg_of_index = {i: v for i, v in self._seg_of_index.items()
+                              if i < index}
+        # the segment's last-persisted marker moved back with the tail
+        rest = [(i, v[1]) for i, v in self._seg_of_index.items()
+                if v[0] == mod.tag]
+        if rest:
+            last_i, last_off = max(rest)
+            self._last_by_tag[mod.tag] = (last_i,
+                                          mod.vlog.read_at(last_off).term)
+        else:
+            self._last_by_tag.pop(mod.tag, None)
 
     def apply(self, entry: LogEntry, offset: int):
         self.user_bytes += len(entry.key) + len(entry.value)
@@ -444,6 +478,8 @@ class NezhaEngine(EngineBase):
         """Group apply; a batch may straddle the Active->New rotation, so
         coalesce per consecutive-module run (order within the drain is
         preserved)."""
+        if not pairs:
+            return
         run: List[Tuple[LogEntry, int]] = []
         run_mod = None
         for e, off in pairs:
@@ -460,7 +496,7 @@ class NezhaEngine(EngineBase):
         self._gc_last = (last.index, last.term)
 
     def _module_of(self, index: int) -> StorageModule:
-        tag = self._seg_of_index.get(index)
+        tag = self._seg_of_index.get(index, (None, 0))[0]
         return self.new if (self.new is not None and tag == self.new.tag) \
             else self.active
 
@@ -468,41 +504,54 @@ class NezhaEngine(EngineBase):
         return self._module_of(index).vlog.read_at(offset)
 
     # ------------------------------------------------------- three-phase
-    def _chain(self) -> List:
-        """Lookup sources, most-recent first (Algorithms 2 & 3)."""
-        chain: List = []
-        if self.new is not None:
-            chain.append(self.new)
-        chain.append(self.active)
-        if self.sorted is not None:
-            chain.append(self.sorted)
-        return chain
-
     def get(self, key: bytes) -> Optional[bytes]:
-        for src in self._chain():
-            v = src.get(key)
+        if self.new is not None:
+            v = self.new.get(key)
             if v is not None:
                 return v
-        return None
+        v = self.active.get(key)
+        if v is not None:
+            return v
+        return self.leveled.get(key)     # newest-first runs, bloom-gated
+
+    def scan_iter(self, lo: bytes, hi: bytes) -> Iterator[Tuple[bytes, bytes]]:
+        """Streaming k-way heap merge over (New, Active, L0..Lk), newest
+        first with newest-wins dedup — nothing is materialized."""
+        sources = []
+        if self.new is not None:
+            sources.append(self.new.scan_iter(lo, hi))
+        sources.append(self.active.scan_iter(lo, hi))
+        sources.extend(self.leveled.scan_sources(lo, hi))
+        return kway_merge_newest_wins(sources)
 
     def scan(self, lo: bytes, hi: bytes):
-        out: Dict[bytes, bytes] = {}
-        for src in reversed(self._chain()):   # oldest first; newest wins
-            for k, v in src.scan(lo, hi):
-                out[k] = v
-        return sorted(out.items())
+        return list(self.scan_iter(lo, hi))
 
     # ---------------------------------------------------------------- GC
     def post_op(self):
+        """Maintenance trigger point between requests: one bounded slice of
+        the in-flight job, else start the next job.  At most one job (an
+        active-segment flush or a level merge) runs at a time."""
         if self.gc_started and not self.gc_completed:
             self.gc_step(self.gc_batch)
+        elif self._merge is not None:
+            self.merge_step(self.gc_batch)
         elif self.active.vlog.size >= self.gc_threshold:
             self.start_gc()
+        else:
+            level = self.leveled.needs_merge()
+            if level is not None:
+                self.start_level_merge(level)
 
     def start_gc(self):
         assert self.gc_completed, "GC already running"
+        if self._last_by_tag.get(self.active.tag) is None:
+            return   # empty active segment: nothing to compact
+        while self._merge is not None:   # direct callers may race a merge
+            self.merge_step(1024)
         self.gc_started, self.gc_completed = True, False
         self.gc_count += 1
+        self._cycle_bytes = 0
         # snapshot point = last entry PERSISTED into the active segment; the
         # compaction may only consume (and later drop) the active segment
         # once everything up to this point has committed+applied — Raft's
@@ -512,36 +561,27 @@ class NezhaEngine(EngineBase):
         self.new = StorageModule(self.dir, self.metrics, f"m{self.gen:04d}",
                                  sync=self.sync, group_commit=True,
                                  cache=self.cache)
-        self._building = SortedStore(self.dir, self.metrics, gen=self.gen,
-                                     cache=self.cache)
+        self._building = SortedRun(self.dir, self.metrics,
+                                   self.leveled.alloc_rid(), level=0,
+                                   cache=self.cache)
         open(self._building.path, "wb").close()
         self._building._started = True
         with open(self._state_path, "w") as f:
             json.dump({"started": True, "complete": False, "gen": self.gen,
+                       "rid": self._building.rid,
                        "last_index": self._boundary[0],
                        "last_term": self._boundary[1]}, f)
         self.metrics.on_write("gc_meta", 64)
         self._gc_snapshot_point = self._boundary
         self._gc_iter = None  # built once the boundary has been applied
 
-    def _merged_items(self, resume_after: Optional[bytes] = None):
-        """Key-ascending merge: live data of Active (via its index, already
-        deduped+sorted) with the previous sorted store."""
-        act = iter(self.active.sorted_items())
-        old = iter(self.sorted.items()) if self.sorted is not None else iter(())
-        a = next(act, None)
-        o = next(old, None)
-        while a is not None or o is not None:
-            if o is None or (a is not None and a[0] <= o[0]):
-                key, off = a
-                if o is not None and o[0] == key:
-                    o = next(old, None)          # active version wins
-                entry = self.active.vlog.read_at(off)  # scattered GC read
-                yield key, entry
-                a = next(act, None)
-            else:
-                yield o
-                o = next(old, None)
+    def _live_active_items(self):
+        """Key-ascending live data of the Active segment (via its index,
+        already deduped+sorted).  Unlike the old monolithic design this
+        never re-reads previously compacted data: one GC cycle's work is
+        O(active segment), not O(total store)."""
+        for key, off in self.active.sorted_items():
+            yield key, self.active.vlog.read_at(off)   # scattered GC read
 
     def gc_step(self, n: int):
         """Advance compaction by n entries; requests interleave freely."""
@@ -549,7 +589,7 @@ class NezhaEngine(EngineBase):
             # barrier: wait until the whole active segment has applied
             if self._gc_last[0] < self._gc_snapshot_point[0]:
                 return
-            self._gc_iter = self._merged_items()
+            self._gc_iter = self._live_active_items()
         buf = []
         done = False
         for _ in range(n):
@@ -559,41 +599,31 @@ class NezhaEngine(EngineBase):
                 break
             buf.append(item)
         if buf:
-            li, lt = self._gc_snapshot_point
-            # append-mode build (incremental)
-            mode_resume = getattr(self._building, "_started", False)
-            self._building._started = True
-            with open(self._building.path, "ab" if mode_resume else "wb") as f:
-                off = f.tell()
-                for key, entry in buf:
-                    data = entry.encode()
-                    f.write(data)
-                    self.metrics.on_write("gc_sorted", len(data))
-                    self._building.index[key] = (off, len(data))
-                    self._building.keys.append(key)
-                    off += len(data)
+            self._cycle_bytes += self._building.append_items(buf,
+                                                             "gc_sorted")
         if done:
             self.finish_gc()
 
     def finish_gc(self):
         li, lt = self._gc_snapshot_point
-        self._building.last_index = li
-        self._building.last_term = lt
-        self._building._complete = True
-        with open(self._building.meta_path, "w") as f:
-            json.dump({"last_index": li, "last_term": lt, "complete": True}, f)
-        old_sorted = self.sorted
-        self.sorted = self._building
+        self._building.seal(li, lt)
+        self.leveled.add_l0(self._building, (li, lt))
         self._building = None
         self._gc_iter = None
-        # cleanup phase: drop expired Active files (+ previous sorted gen)
+        # cleanup phase: drop the consumed Active segment
+        old_tag = self.active.tag
         self.active.destroy()
-        if old_sorted is not None:
-            old_sorted.destroy()
         # role rotation: New becomes Active
         self.active = self.new
         self.new = None
         self.gc_completed = True
+        # prune raft-index maps below the GC boundary: every index <= li
+        # lived in the destroyed segment (the maps stay O(live tail))
+        self._seg_of_index = {i: v for i, v in self._seg_of_index.items()
+                              if i > li}
+        self._last_by_tag.pop(old_tag, None)
+        self.metrics.on_gc_cycle("flush", self._cycle_bytes, 0,
+                                 self.gc_count)
         with open(self._state_path, "w") as f:
             json.dump({"started": True, "complete": True, "gen": self.gen,
                        "last_index": li, "last_term": lt}, f)
@@ -601,9 +631,60 @@ class NezhaEngine(EngineBase):
         if self.on_snapshot is not None:
             self.on_snapshot(li, lt)
 
+    # ------------------------------------------------------- level merges
+    def start_level_merge(self, level: int):
+        """Begin merging every run of `level` into one run on level+1.
+        Progress is incremental (merge_step) and crash-safe: the output is
+        invisible until commit_merge swaps the manifest, so a crash simply
+        discards the partial output and retries later."""
+        inputs = self.leveled.level_runs(level)    # newest-first
+        out = SortedRun(self.dir, self.metrics, self.leveled.alloc_rid(),
+                        level=level + 1, cache=self.cache)
+        open(out.path, "wb").close()
+        self._merge = {
+            "out": out, "inputs": inputs, "level": level, "bytes": 0,
+            "iter": kway_merge_newest_wins([r.items() for r in inputs]),
+        }
+
+    def merge_step(self, n: int):
+        job = self._merge
+        out = job["out"]
+        buf = []
+        done = False
+        for _ in range(n):
+            item = next(job["iter"], None)
+            if item is None:
+                done = True
+                break
+            buf.append(item)
+        if buf:
+            job["bytes"] += out.append_items(buf, "gc_level_merge")
+        if done:
+            self.finish_level_merge()
+
+    def finish_level_merge(self):
+        job = self._merge
+        out, inputs = job["out"], job["inputs"]
+        # the merged run is complete up to its newest input's boundary
+        newest = max(inputs, key=lambda r: r.last_index)
+        out.seal(newest.last_index, newest.last_term)
+        self.leveled.commit_merge(out, inputs)
+        self.metrics.on_gc_cycle("merge", job["bytes"], job["level"] + 1,
+                                 self.gc_count)
+        self._merge = None
+
     def run_gc_to_completion(self):
-        while self.gc_started and not self.gc_completed:
-            self.gc_step(1024)
+        """Drain the in-flight flush plus any cascading level merges."""
+        while True:
+            if self.gc_started and not self.gc_completed:
+                self.gc_step(1024)
+            elif self._merge is not None:
+                self.merge_step(1024)
+            else:
+                level = self.leveled.needs_merge()
+                if level is None:
+                    return
+                self.start_level_merge(level)
 
     # ----------------------------------------------------------- recovery
     def recover(self):
@@ -612,12 +693,50 @@ class NezhaEngine(EngineBase):
             with open(self._state_path) as f:
                 state = json.load(f)
         gen = state.get("gen", 0)
-        if state.get("started") and not state.get("complete"):
-            # crashed mid-GC: resume from the interrupt point (§III-E)
-            self.gen = gen
-            prev = SortedStore(self.dir, self.metrics, gen=gen - 1,
-                               cache=self.cache)
-            self.sorted = prev if prev.load() else None
+        self.gen = gen
+        mid_gc = bool(state.get("started")) and not state.get("complete")
+        # the manifest is authoritative for the committed run set; a run
+        # file it does not list is a crashed level-merge output -> pruned
+        self.leveled = LeveledStore(self.dir, self.metrics, cache=self.cache,
+                                    fanout=self.level_fanout)
+        self.leveled.load()
+        keep: Tuple[str, ...] = ()
+        b: Optional[SortedRun] = None
+        if mid_gc:
+            # a state file without 'rid' (legacy writer) can't name its
+            # partial run: allocate a fresh one and let the flush restart
+            # from the barrier — the old active segment still holds it all
+            rid = state.get("rid")
+            if rid is None:
+                rid = self.leveled.alloc_rid()
+            b = SortedRun(self.dir, self.metrics, rid, level=0,
+                          cache=self.cache)
+            keep = (b.path, b.meta_path)
+        self.leveled.prune_orphans(keep=keep)
+        self._merge = None   # an unfinished merge is simply retried later
+        if mid_gc and any(r.rid == state.get("rid")
+                          for r in self.leveled.runs):
+            # crash landed between add_l0's manifest commit and the final
+            # gc_state write: the flush IS committed; only the cleanup /
+            # rotation remained.  Redo it idempotently instead of
+            # re-adding the run.
+            old = StorageModule(self.dir, self.metrics, f"m{gen - 1:04d}",
+                                sync=self.sync, group_commit=True,
+                                cache=self.cache)
+            old.destroy()
+            self.active = StorageModule(self.dir, self.metrics,
+                                        f"m{gen:04d}", sync=self.sync,
+                                        group_commit=True, cache=self.cache)
+            self.active.db.recover()
+            self.new = None
+            self.gc_started, self.gc_completed = True, True
+            self._gc_last = self.leveled.boundary
+            li, lt = self.leveled.boundary
+            with open(self._state_path, "w") as f:
+                json.dump({"started": True, "complete": True, "gen": gen,
+                           "last_index": li, "last_term": lt}, f)
+        elif mid_gc:
+            # crashed mid-flush: resume from the interrupt point (§III-E)
             self.active = StorageModule(self.dir, self.metrics,
                                         f"m{gen - 1:04d}", sync=self.sync,
                                         group_commit=True, cache=self.cache)
@@ -626,21 +745,8 @@ class NezhaEngine(EngineBase):
                                      f"m{gen:04d}", sync=self.sync,
                                      group_commit=True, cache=self.cache)
             self.new.db.recover()
-            self._building = SortedStore(self.dir, self.metrics, gen=gen,
-                                         cache=self.cache)
-            resume_key = self._building.last_key_on_disk()
-            self._building._started = resume_key is not None
-            if resume_key is not None:  # reload partial index
-                self._building.index.clear()
-                self._building.keys = []
-                with open(self._building.path, "rb") as f:
-                    buf = f.read()
-                off = 0
-                while off < len(buf):
-                    e, nxt = LogEntry.decode(buf, off)
-                    self._building.index[e.key] = (off, nxt - off)
-                    self._building.keys.append(e.key)
-                    off = nxt
+            self._building = b
+            resume_key = self._building.load_partial()
             self.gc_started, self.gc_completed = True, False
             self._gc_snapshot_point = (state["last_index"],
                                        state["last_term"])
@@ -651,15 +757,11 @@ class NezhaEngine(EngineBase):
                 # and the active db was WAL-recovered: resume immediately
                 # after the interrupt point (paper §III-E).
                 self._gc_last = self._gc_snapshot_point
-                full = self._merged_items()
+                full = self._live_active_items()
                 self._gc_iter = (x for x in full if x[0] > resume_key)
             else:
                 self._gc_iter = None  # barrier re-evaluated in gc_step
         else:
-            self.gen = gen
-            cur = SortedStore(self.dir, self.metrics, gen=gen,
-                              cache=self.cache)
-            self.sorted = cur if cur.load() else None
             self.active = StorageModule(self.dir, self.metrics,
                                         f"m{gen:04d}", sync=self.sync,
                                         group_commit=True, cache=self.cache)
@@ -667,9 +769,8 @@ class NezhaEngine(EngineBase):
             self.new = None
             self.gc_started = bool(state.get("started"))
             self.gc_completed = True
-            if self.sorted is not None:
-                self._gc_last = (self.sorted.last_index,
-                                 self.sorted.last_term)
+            if self.leveled.runs:
+                self._gc_last = self.leveled.boundary
         # rebuild raft tail from the live vlogs — HEADER-ONLY scan: the
         # KVS-Raft state machine replays (key, offset), never values
         # (the paper's Fig. 11 recovery win).  Values hydrate lazily via
@@ -680,45 +781,46 @@ class NezhaEngine(EngineBase):
             for off, e in mod.vlog.scan_headers():
                 entries.append(e)
                 offsets.append(off)
-                self._seg_of_index[e.index] = mod.tag
-        si, st = (self.sorted.last_index, self.sorted.last_term) \
-            if self.sorted is not None else (0, 0)
+                self._seg_of_index[e.index] = (mod.tag, off)
+                self._last_by_tag[mod.tag] = (e.index, e.term)
+        si, st = self.leveled.boundary if self.leveled.runs else (0, 0)
         entries = [e for e in entries if e.index > si]
         offsets = offsets[-len(entries):] if entries else []
+        self._seg_of_index = {i: v for i, v in self._seg_of_index.items()
+                              if i > si}
         return entries, offsets, si, st
 
     # ----------------------------------------------------------- snapshot
     def snapshot(self):
-        if self.sorted is None:
+        if not self.leveled.runs:
             return None
-        return (self.sorted.last_index, self.sorted.last_term,
-                self.sorted.snapshot_payload())
+        li, lt = self.leveled.boundary
+        return li, lt, self.leveled.snapshot_payload()
 
     def install_snapshot(self, last_index: int, last_term: int, payload):
-        # A shipped snapshot supersedes everything local: abort any local GC
-        # and reset the mutable modules (Raft discards the whole local log
-        # before installing, so active/new hold only superseded entries).
+        # A shipped snapshot supersedes everything local: abort any local
+        # GC/merge and reset the mutable modules (Raft discards the whole
+        # local log before installing, so active/new hold only superseded
+        # entries).
         if self._building is not None:
             self._building.destroy()
             self._building = None
         self._gc_iter = None
+        if self._merge is not None:
+            self._merge["out"].destroy()
+            self._merge = None
         self.gc_started, self.gc_completed = False, True
         if self.new is not None:
             self.new.destroy()
             self.new = None
         self.active.destroy()
         self._seg_of_index.clear()
+        self._last_by_tag.clear()
         self.gen += 1
         self.active = StorageModule(self.dir, self.metrics,
                                     f"m{self.gen:04d}", sync=self.sync,
                                     group_commit=True, cache=self.cache)
-        store = SortedStore(self.dir, self.metrics, gen=self.gen,
-                            cache=self.cache)
-        store.install_payload(payload, last_index, last_term)
-        old = self.sorted
-        self.sorted = store
-        if old is not None:
-            old.destroy()
+        self.leveled.install_payload(payload, last_index, last_term)
         self._gc_last = (last_index, last_term)
         with open(self._state_path, "w") as f:
             json.dump({"started": False, "complete": True, "gen": self.gen,
@@ -728,6 +830,11 @@ class NezhaEngine(EngineBase):
         self.active.close()
         if self.new is not None:
             self.new.close()
+        if self._building is not None:
+            self._building.close()
+        if self._merge is not None:
+            self._merge["out"].close()
+        self.leveled.close()
 
 
 ENGINES = {

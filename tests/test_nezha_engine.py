@@ -75,8 +75,8 @@ def test_three_phase_reads_during_gc():
     while not eng.gc_completed:
         eng.gc_step(16)
         assert eng.get(b"key000010") == b"NEW" * 100
-    # Post-GC: sorted store serves history, new module serves fresh data
-    assert eng.sorted is not None
+    # Post-GC: L0 run serves history, new module serves fresh data
+    assert eng.leveled.runs
     assert eng.get(b"key000150") == bytes([150]) * VAL
     assert eng.get(b"key000010") == b"NEW" * 100
     eng.close()
@@ -115,7 +115,7 @@ def test_crash_mid_gc_resumes_from_interrupt_point():
     assert eng2.gc_started and not eng2.gc_completed
     eng2.run_gc_to_completion()
     # nothing lost, nothing duplicated
-    assert len(eng2.sorted.keys) == 200
+    assert eng2.leveled.total_keys() == 200
     assert eng2.get(b"key000000") == bytes([0]) * VAL
     assert eng2.get(b"key000199") == bytes([199]) * VAL
     assert len(eng2.scan(b"key000000", b"key000199")) == 200
