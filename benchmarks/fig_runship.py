@@ -1,0 +1,73 @@
+"""Fig. RS — run-shipping replication: cluster-wide GC write amplification
+and apply throughput, local-GC baseline vs leader-driven GC with follower
+run adoption (3-node cluster, several GC cycles + level merges).
+
+Claim under measurement: with run shipping on, follower per-cycle GC flush
+bytes drop to ~0 and cluster-wide GC rewrite work falls to the leader's
+share (~1/N of the local-GC baseline), while follower stores stay
+byte-for-byte scan-equivalent to the leader.  The price is explicit and
+accounted: run/snapshot bytes on the wire (Metrics.on_ship) and the
+followers' one-time run installs ('run_adopt')."""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks import common
+from repro.core.cluster import Cluster
+
+N = 1200 if common.FULL else 420
+VSIZE = 1024
+
+
+def run(engines=None, n=None, vsize=None, gc_threshold=None, seed=11):
+    n = n or N
+    vsize = vsize or VSIZE
+    gc_threshold = gc_threshold or max((n // 6) * vsize, 16 << 10)
+    rows = []
+    for mode in ("local", "shipped"):
+        wd = tempfile.mkdtemp(prefix=f"runship_{mode}_")
+        c = Cluster(n=3, engine="nezha", workdir=wd, seed=seed,
+                    engine_kwargs={"gc_threshold": gc_threshold,
+                                   "gc_batch": 128, "level_fanout": 2,
+                                   "run_shipping": mode == "shipped"})
+        items = common.keys_values(n, vsize)
+        dt, done = common.timed(c.put_many, items)
+        ld = c.elect()
+        c.engines[ld.nid].run_gc_to_completion()
+        if mode == "shipped":
+            c.drain_shipping()
+        else:
+            for _ in range(2000):
+                c.tick()
+                if all(c.nodes[p].last_applied >= ld.commit_index
+                       for p in ld.peers):
+                    break
+        ld = c.elect()
+        le = c.engines[ld.nid]
+        fids = [i for i in range(3) if i != ld.nid]
+        lscan = le.scan(b"", b"\xff" * 11)
+        equal = all(c.engines[f].scan(b"", b"\xff" * 11) == lscan
+                    for f in fids)
+        cluster_gc = sum(m.gc_total_bytes() for m in c.metrics)
+        fol_flush = sum(c.metrics[f].write_bytes.get("gc_sorted", 0)
+                        for f in fids)
+        fol_merge = sum(c.metrics[f].write_bytes.get("gc_level_merge", 0)
+                        for f in fids)
+        adopt = sum(c.metrics[f].write_bytes.get("run_adopt", 0)
+                    for f in fids)
+        ship = sum(m.total_ship_bytes() for m in c.metrics)
+        user = max(le.user_bytes, 1)
+        derived = (f"ops_s={done / dt:.0f}"
+                   f";cluster_gc_bytes={cluster_gc}"
+                   f";cluster_gc_wa={cluster_gc / (3 * user):.3f}"
+                   f";follower_gc_flush_bytes={fol_flush}"
+                   f";follower_gc_merge_bytes={fol_merge}"
+                   f";adopt_bytes={adopt};ship_bytes={ship}"
+                   f";gc_cycles={le.gc_count};scan_equal={int(equal)}")
+        rows.append((f"fig_runship/{mode}", 1e6 * dt / done, derived))
+        common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -16,13 +16,16 @@ import time
 def smoke() -> int:
     """Tiny all-engine gate runnable in the tier-1 time budget.
 
-    Asserts the three load-bearing claims survive the pipeline:
+    Asserts the four load-bearing claims survive the pipeline:
       1. nezha writes no more value bytes per user byte than original
          (the paper's >=3x -> 1x story),
       2. group commit actually cuts fsyncs: batch=32 uses < 1/4 the fsyncs
          of batch=1 on a small synced nezha run,
       3. leveled GC (fig10 at smoke scale) keeps per-cycle flush work flat
-         while sustaining puts through multiple GC cycles.
+         while sustaining puts through multiple GC cycles,
+      4. run shipping (fig_runship at smoke scale) keeps follower GC flush
+         bytes at ~0 and cuts cluster-wide GC rewrite work vs the local-GC
+         baseline, with leader/follower scans byte-identical.
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
@@ -65,6 +68,14 @@ def smoke() -> int:
         show(name.replace("fig10_gc", "smoke_gc"), us, derived)
     gc_stats = common.parse_derived(gc_rows[0][2])
 
+    # fig_runship at smoke scale: leader-driven GC + follower adoption
+    from benchmarks import fig_runship
+    rs_rows = fig_runship.run(n=150, vsize=1024, gc_threshold=30 << 10)
+    for name, us, derived in rs_rows:
+        show(name.replace("fig_runship", "smoke_runship"), us, derived)
+    rs = {name.split("/")[-1]: common.parse_derived(d)
+          for name, _, d in rs_rows}
+
     ok = True
     if wa["nezha"] > wa["original"]:
         show("smoke/FAIL", 0, f"nezha_wa={wa['nezha']:.2f}_exceeds_"
@@ -83,13 +94,28 @@ def smoke() -> int:
              f"{gc_stats.get('gc_flush_first')}->"
              f"{gc_stats.get('gc_flush_last')}")
         ok = False
+    if rs["shipped"].get("scan_equal") != 1:
+        show("smoke/FAIL", 0, "run_shipping_follower_scan_diverged")
+        ok = False
+    if rs["shipped"].get("follower_gc_flush_bytes", 1) > 0:
+        show("smoke/FAIL", 0, "run_shipping_follower_still_flushed_"
+             f"{rs['shipped'].get('follower_gc_flush_bytes'):.0f}_bytes")
+        ok = False
+    if rs["shipped"].get("cluster_gc_bytes", 1) >= \
+            rs["local"].get("cluster_gc_bytes", 0):
+        show("smoke/FAIL", 0, "run_shipping_did_not_cut_cluster_gc_bytes="
+             f"{rs['shipped'].get('cluster_gc_bytes'):.0f}_vs_local="
+             f"{rs['local'].get('cluster_gc_bytes'):.0f}")
+        ok = False
     if ok:
         show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
              f";original_wa={wa['original']:.2f}"
              f";fsync_cut={fsyncs[1]}->{fsyncs[32]}"
              f";gc_cycles={gc_stats.get('gc_cycles'):.0f}"
              f";gc_flush={gc_stats.get('gc_flush_first'):.0f}->"
-             f"{gc_stats.get('gc_flush_last'):.0f}")
+             f"{gc_stats.get('gc_flush_last'):.0f}"
+             f";runship_cluster_gc={rs['local'].get('cluster_gc_bytes'):.0f}"
+             f"->{rs['shipped'].get('cluster_gc_bytes'):.0f}")
     common.write_artifact("smoke", rows)
     return 0 if ok else 1
 
@@ -108,7 +134,7 @@ def main() -> None:
     from benchmarks import (common, fig4_put, fig5_get, fig6_scan,
                             fig7_scan_length, fig8_ycsb, fig9_scalability,
                             fig10_gc_impact, fig11_recovery, fig12_batching,
-                            roofline)
+                            fig_runship, roofline)
 
     suites = {
         "fig4": lambda: fig4_put.run()[0],
@@ -120,6 +146,7 @@ def main() -> None:
         "fig10": fig10_gc_impact.run,
         "fig11": fig11_recovery.run,
         "fig12": fig12_batching.run,
+        "fig_runship": fig_runship.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

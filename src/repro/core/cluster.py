@@ -17,6 +17,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.engines import ENGINES, NezhaEngine
 from repro.core.metrics import Metrics
 from repro.core.raft import LEADER, RaftNode
+from repro.core.shipping import RunAdopter, RunShipper
 from repro.core.simnet import SimNet
 
 
@@ -24,7 +25,8 @@ class Cluster:
     def __init__(self, n: int = 3, engine: str = "nezha", workdir: str = "",
                  seed: int = 0, sync: bool = False, leader_hint: int = 0,
                  engine_kwargs: Optional[dict] = None, heartbeat_every: int = 5,
-                 election_timeout=(20, 40), max_batch: int = 64):
+                 election_timeout=(20, 40), max_batch: int = 64,
+                 drop_prob: float = 0.0):
         self.n = n
         self.engine_name = engine
         self.workdir = workdir
@@ -35,7 +37,7 @@ class Cluster:
         self.election_timeout = election_timeout
         self.max_batch = max_batch
         os.makedirs(workdir, exist_ok=True)
-        self.net = SimNet(list(range(n)), seed=seed)
+        self.net = SimNet(list(range(n)), seed=seed, drop_prob=drop_prob)
         self.metrics: List[Metrics] = [Metrics() for _ in range(n)]
         self.engines: List = [None] * n
         self.nodes: List[Optional[RaftNode]] = [None] * n
@@ -67,6 +69,14 @@ class Cluster:
             install_snapshot_fn=getattr(eng, "install_snapshot", None))
         if isinstance(eng, NezhaEngine):
             eng.on_snapshot = node.compact_to
+            if eng.run_shipping:
+                # replication tier 2: the leader's sealed runs stream to
+                # followers as adoption records instead of each node
+                # re-running GC (see repro/core/shipping.py)
+                node.shipper = RunShipper(node, eng, self.metrics[i])
+                node.adopter = RunAdopter(node, eng, self.metrics[i])
+                eng.ship_hook = node.shipper.on_run_sealed
+                eng.raft_role = (lambda node=node: node.role == LEADER)
         self.nodes[i] = node
         if not fresh:
             entries, offsets, si, st = eng.recover()
@@ -169,6 +179,49 @@ class Cluster:
 
     def elect_engine(self):
         return self.engines[self.elect().nid]
+
+    # ------------------------------------------------------- run shipping
+    def drain_shipping(self, max_ticks: int = 4000) -> bool:
+        """Tick until every live follower's durable ship position reaches
+        the leader's newest sealed record (True), or the budget runs out.
+        Also waits for the apply pipeline so scans are comparable."""
+        for _ in range(max_ticks):
+            ld = self.leader()
+            if ld is not None:
+                caught_up = all(
+                    self.nodes[p] is None or p in self.net.down or
+                    self.nodes[p].last_applied >= ld.commit_index
+                    for p in ld.peers)
+                shipped = True
+                if ld.shipper is not None and ld.shipper.records:
+                    tip = ld.shipper.records[-1][0]
+                    shipped = all(
+                        p in self.net.down or self.nodes[p] is None or
+                        ld.shipper.peers[p].pos >= tip
+                        for p in ld.peers)
+                if caught_up and shipped:
+                    return True
+            self.tick()
+        return False
+
+    def replication_report(self) -> List[dict]:
+        """Per-node replication + GC byte accounting (run-shipping
+        evidence: follower gc_flush_bytes ~ 0 when adoption is on)."""
+        ld = self.leader()
+        out = []
+        for i, m in enumerate(self.metrics):
+            eng = self.engines[i]
+            out.append({
+                "node": i,
+                "role": "leader" if ld is not None and i == ld.nid
+                        else "follower",
+                "ship_bytes": dict(m.ship_bytes),
+                "gc_flush_bytes": m.write_bytes.get("gc_sorted", 0),
+                "gc_merge_bytes": m.write_bytes.get("gc_level_merge", 0),
+                "adopt_bytes": m.write_bytes.get("run_adopt", 0),
+                "adopted_runs": getattr(eng, "adopt_count", 0),
+            })
+        return out
 
     # --------------------------------------------------------------- faults
     def crash(self, i: int):

@@ -14,7 +14,28 @@ the paper couples/decouples the two layers:
   Nezha-NoGC  KVS-Raft: raft log IS the ValueLog, LSM holds key->offset
               => exactly 1x value write; reads pay indirection
   Nezha       Nezha-NoGC + Raft-aware GC (sorted ValueLog + hash index) +
-              three-phase request routing
+              three-phase request routing; with run_shipping=True, GC is
+              leader-only and followers adopt the sealed runs (below)
+
+Replication tiers — how bytes reach a follower, cheapest-first:
+
+  1. Value shipping (always on): AppendEntries carries the log entries
+     themselves; each follower persists them once into its own active
+     segment.  This is the only tier that runs on the put critical path.
+  2. Run shipping (NezhaEngine, run_shipping=True): only the leader runs
+     GC flushes and leveled merges; every sealed run is streamed to
+     followers as a chunked, resumable run-adoption record (shipping.py)
+     and installed wholesale — follower gc_sorted/gc_level_merge rewrite
+     bytes stay at zero.  Fires whenever the leader seals a run, strictly
+     ordered behind the applied log.
+  3. Snapshot shipping (always available): InstallSnapshot ships the whole
+     run set.  Fires when a follower is behind the leader's log-compaction
+     point (classic Raft catch-up) or when a run-adoption fence trips (a
+     diverged / crashed / long-partitioned follower), making it run
+     shipping's safety net.
+
+  LSM-Raft's `_ShippedLSM` is the related-work variant of tier 2: shipped
+  compacted SSTables instead of shipped value-log runs.
 
 Batching / caching knobs (the group-commit I/O pipeline):
 
@@ -92,7 +113,8 @@ class EngineBase(LogStoreBase):
     def snapshot(self):
         return None
 
-    def install_snapshot(self, last_index: int, last_term: int, payload):
+    def install_snapshot(self, last_index: int, last_term: int, payload,
+                         keep_tail: bool = True):
         raise NotImplementedError(f"{self.name} has no snapshot support")
 
     def recover(self):
@@ -293,6 +315,7 @@ class _ShippedLSM(MiniLSM):
         from repro.core.minilsm import SSTable
         new_l1 = SSTable.write(path, list(merged.items()), self.metrics,
                                "sst_ship", self.cache)
+        self.metrics.on_ship("sst", new_l1.size)   # arrived over the wire
         for sst in self.l0 + self.l1:
             sst.delete()
         self.l0, self.l1 = [], [new_l1]
@@ -395,12 +418,19 @@ class NezhaEngine(EngineBase):
 
     def __init__(self, dirpath, metrics=None, *, gc_threshold: int = 32 << 20,
                  gc_batch: int = 64, level_fanout: int = 4,
-                 on_snapshot=None, **kw):
+                 on_snapshot=None, run_shipping: bool = False, **kw):
         super().__init__(dirpath, metrics, **kw)
         self.gc_threshold = gc_threshold
         self.gc_batch = gc_batch
         self.level_fanout = level_fanout
         self.on_snapshot = on_snapshot  # callback(last_index, last_term)
+        # run shipping (replication tier 2): GC is leader-gated; sealed
+        # runs flow to ship_hook (the RunShipper) and followers install
+        # them via adopt_run instead of compacting locally
+        self.run_shipping = run_shipping
+        self.ship_hook = None   # callback(record dict, run bytes)
+        self.raft_role = None   # callable() -> is this node the leader NOW
+        self.adopt_count = 0
         self.gen = 0
         self.active = StorageModule(dirpath, self.metrics,
                                     f"m{self.gen:04d}", sync=self.sync,
@@ -426,6 +456,17 @@ class NezhaEngine(EngineBase):
     # --------------------------------------------------------- log store
     def _write_module(self) -> StorageModule:
         return self.new if self.new is not None else self.active
+
+    def _purge_module(self, tag: str):
+        """Remove any files a crashed rotation left under `tag`."""
+        StorageModule(self.dir, self.metrics, tag, sync=self.sync,
+                      group_commit=True, cache=self.cache).destroy()
+
+    def _fresh_module(self, tag: str) -> StorageModule:
+        """Storage module at `tag`, guaranteed empty."""
+        self._purge_module(tag)
+        return StorageModule(self.dir, self.metrics, tag, sync=self.sync,
+                             group_commit=True, cache=self.cache)
 
     def append(self, entry: LogEntry) -> int:
         mod = self._write_module()
@@ -531,17 +572,28 @@ class NezhaEngine(EngineBase):
     def post_op(self):
         """Maintenance trigger point between requests: one bounded slice of
         the in-flight job, else start the next job.  At most one job (an
-        active-segment flush or a level merge) runs at a time."""
+        active-segment flush or a level merge) runs at a time.  With run
+        shipping on, only the leader starts jobs — followers receive the
+        sealed output instead (a job already in flight when leadership is
+        lost still drains; the new leader's fence/resync covers us)."""
         if self.gc_started and not self.gc_completed:
             self.gc_step(self.gc_batch)
         elif self._merge is not None:
             self.merge_step(self.gc_batch)
+        elif not self._gc_allowed():
+            return
         elif self.active.vlog.size >= self.gc_threshold:
             self.start_gc()
         else:
             level = self.leveled.needs_merge()
             if level is not None:
                 self.start_level_merge(level)
+
+    def _gc_allowed(self) -> bool:
+        if not self.run_shipping:
+            return True
+        role = self.raft_role if self.raft_role is not None else self.is_leader
+        return bool(role())
 
     def start_gc(self):
         assert self.gc_completed, "GC already running"
@@ -558,9 +610,7 @@ class NezhaEngine(EngineBase):
         # log-completeness is preserved (paper §III-E).
         self._boundary = self._last_by_tag.get(self.active.tag, (0, 0))
         self.gen += 1
-        self.new = StorageModule(self.dir, self.metrics, f"m{self.gen:04d}",
-                                 sync=self.sync, group_commit=True,
-                                 cache=self.cache)
+        self.new = self._fresh_module(f"m{self.gen:04d}")
         self._building = SortedRun(self.dir, self.metrics,
                                    self.leveled.alloc_rid(), level=0,
                                    cache=self.cache)
@@ -606,8 +656,11 @@ class NezhaEngine(EngineBase):
 
     def finish_gc(self):
         li, lt = self._gc_snapshot_point
-        self._building.seal(li, lt)
-        self.leveled.add_l0(self._building, (li, lt))
+        boundary_before = self.leveled.boundary
+        runs_before = len(self.leveled.runs)
+        sealed = self._building
+        sealed.seal(li, lt)
+        self.leveled.add_l0(sealed, (li, lt))
         self._building = None
         self._gc_iter = None
         # cleanup phase: drop the consumed Active segment
@@ -628,6 +681,16 @@ class NezhaEngine(EngineBase):
             json.dump({"started": True, "complete": True, "gen": self.gen,
                        "last_index": li, "last_term": lt}, f)
         self.metrics.on_write("gc_meta", 64)
+        # _gc_allowed: a deposed leader draining its in-flight job must
+        # not pay the export read — the shipper would drop it anyway
+        if self.run_shipping and self.ship_hook is not None and \
+                self._gc_allowed():
+            self.ship_hook({"kind": "flush", "level": 0,
+                            "last_index": li, "last_term": lt,
+                            "boundary_before": boundary_before,
+                            "runs_before": runs_before,
+                            "boundary": (li, lt), "retire": []},
+                           self.leveled.export_run(sealed))
         if self.on_snapshot is not None:
             self.on_snapshot(li, lt)
 
@@ -668,10 +731,116 @@ class NezhaEngine(EngineBase):
         # the merged run is complete up to its newest input's boundary
         newest = max(inputs, key=lambda r: r.last_index)
         out.seal(newest.last_index, newest.last_term)
+        retire = [(r.level, r.last_index) for r in inputs]
+        runs_before = len(self.leveled.runs)
         self.leveled.commit_merge(out, inputs)
         self.metrics.on_gc_cycle("merge", job["bytes"], job["level"] + 1,
                                  self.gc_count)
         self._merge = None
+        if self.run_shipping and self.ship_hook is not None and \
+                self._gc_allowed():
+            self.ship_hook({"kind": "merge", "level": out.level,
+                            "last_index": out.last_index,
+                            "last_term": out.last_term,
+                            "boundary_before": self.leveled.boundary,
+                            "runs_before": runs_before,
+                            "boundary": self.leveled.boundary,
+                            "retire": retire},
+                           self.leveled.export_run(out))
+
+    # ------------------------------------------------------- run adoption
+    def adopt_run(self, rec: dict, data: bytes):
+        """Follower side of run shipping: install a leader-sealed run and
+        retire exactly the inputs the leader consumed — in place of local
+        GC.  The caller (RunAdopter) must have applied the log through
+        rec['last_index'] first.  Returns (ok, new_offsets): ok=False means
+        a fence tripped (divergent manifest, concurrent local GC of a
+        deposed leader, stale record) and the caller should fall back to
+        snapshot catch-up; new_offsets maps the surviving raft-tail indices
+        to their rewritten vlog offsets after a flush adoption."""
+        pos = tuple(rec["pos"])
+        if pos <= tuple(self.leveled.ship_pos):
+            return False, None            # stale/duplicate record
+        if (self.gc_started and not self.gc_completed) or \
+                self._merge is not None or self.new is not None:
+            return False, None            # mid-local-GC (deposed leader)
+        if tuple(rec["boundary_before"]) != tuple(self.leveled.boundary):
+            return False, None            # manifests diverged
+        if rec.get("runs_before", len(self.leveled.runs)) != \
+                len(self.leveled.runs):
+            # structural gap: records were missed (e.g. merges across a
+            # leadership change leave the boundary unchanged, so the
+            # boundary fence alone would not see it) — resync instead of
+            # silently forking the run hierarchy
+            return False, None
+        li, lt = rec["last_index"], rec["last_term"]
+        if rec["kind"] == "merge":
+            try:
+                self.leveled.adopt_run(rec["level"], li, lt, data,
+                                       [tuple(x) for x in rec["retire"]],
+                                       self.leveled.boundary, pos)
+            except ValueError:
+                return False, None        # an input run is missing
+            self.adopt_count += 1
+            self.metrics.on_gc_cycle("adopt", len(data), rec["level"],
+                                     self.adopt_count)
+            return True, None
+        # flush: install the L0 run, then retire the covered Active prefix
+        # (the leader dropped its whole active segment; we keep only the
+        # raft tail past the boundary, rewritten into a fresh segment)
+        self.leveled.adopt_run(0, li, lt, data, [], (li, lt), pos)
+        new_offsets = self._retire_active_prefix(li, lt)
+        self._gc_last = max(self._gc_last, (li, lt))
+        self.adopt_count += 1
+        self.metrics.on_gc_cycle("adopt", len(data), 0, self.adopt_count)
+        return True, new_offsets
+
+    def _retire_active_prefix(self, li: int, lt: int) -> Dict[int, int]:
+        """Adopt-path rotation: replace Active with a fresh segment holding
+        only the raft tail (index > li), re-applying the already-applied
+        puts at their new offsets.  O(tail), not O(segment) — the adopted
+        run replaces everything at or below the boundary.
+
+        Crash ordering: the new segment is fully built + synced, THEN
+        gc_state.json moves the generation (the commit point), THEN the
+        old segment is deleted.  Before the state write the old segment is
+        authoritative (the adopted run merely duplicates its prefix, which
+        reads tolerate); after it the old files are orphans."""
+        old = self.active
+        tail = sorted((i, off) for i, (tag, off) in self._seg_of_index.items()
+                      if i > li and tag == old.tag)
+        entries = [old.vlog.read_at(off) for _, off in tail]
+        self._last_by_tag.pop(old.tag, None)
+        mod, new_offsets = self._build_tail_segment(entries)
+        with open(self._state_path, "w") as f:   # rotation commit point
+            json.dump({"started": False, "complete": True, "gen": self.gen,
+                       "last_index": li, "last_term": lt}, f)
+        self.metrics.on_write("gc_meta", 64)
+        old.destroy()
+        self.active = mod
+        return new_offsets
+
+    def _build_tail_segment(self, entries: List[LogEntry]):
+        """Fresh segment holding exactly `entries` (a raft tail, one per
+        index, ascending), with the already-applied puts re-applied at
+        their new offsets; _seg_of_index/_last_by_tag are re-pointed at
+        it.  Shared by the adopt-path rotation and snapshot install so
+        the rebuild rules can't drift.  Returns (module, {index: off})."""
+        self.gen += 1
+        mod = self._fresh_module(f"m{self.gen:04d}")
+        offs = mod.vlog.append_batch(entries) if entries else []
+        applied = self._gc_last[0]
+        pairs = [(e, off) for e, off in zip(entries, offs)
+                 if e.kind == KIND_PUT and e.index <= applied]
+        if pairs:
+            mod.apply_batch(pairs)
+        mod.sync_now()
+        self._seg_of_index = {e.index: (mod.tag, off)
+                              for e, off in zip(entries, offs)}
+        if entries:
+            self._last_by_tag[mod.tag] = (entries[-1].index,
+                                          entries[-1].term)
+        return mod, {e.index: off for e, off in zip(entries, offs)}
 
     def run_gc_to_completion(self):
         """Drain the in-flight flush plus any cascading level merges."""
@@ -762,6 +931,14 @@ class NezhaEngine(EngineBase):
             else:
                 self._gc_iter = None  # barrier re-evaluated in gc_step
         else:
+            # every complete-state generation owns exactly one live
+            # segment: m{gen-1} (crash between a rotation commit and the
+            # old segment's deletion) and m{gen+1} (crash between a
+            # rotation build and its commit) are orphans — purge both
+            for g in (gen - 1, gen + 1):
+                leftover = os.path.join(self.dir, f"valuelog_m{g:04d}.log")
+                if g >= 0 and os.path.exists(leftover):
+                    self._purge_module(f"m{g:04d}")
             self.active = StorageModule(self.dir, self.metrics,
                                         f"m{gen:04d}", sync=self.sync,
                                         group_commit=True, cache=self.cache)
@@ -784,10 +961,30 @@ class NezhaEngine(EngineBase):
                 self._seg_of_index[e.index] = (mod.tag, off)
                 self._last_by_tag[mod.tag] = (e.index, e.term)
         si, st = self.leveled.boundary if self.leveled.runs else (0, 0)
+        scanned = len(entries)
         entries = [e for e in entries if e.index > si]
         offsets = offsets[-len(entries):] if entries else []
         self._seg_of_index = {i: v for i, v in self._seg_of_index.items()
                               if i > si}
+        if self.gc_completed and self.new is None and si and \
+                scanned != len(entries):
+            # the active segment still holds records at/below the manifest
+            # boundary: a crash landed between an install/adoption commit
+            # and its rotation.  Rebuild the segment tail-only — stale
+            # applied records must not shadow newer run data (a catch-up
+            # snapshot's contents can be AHEAD of what this node applied).
+            old = self.active
+            full = [old.vlog.read_at(self._seg_of_index[e.index][1])
+                    for e in entries]
+            self._last_by_tag.clear()
+            self.active, new_offs = self._build_tail_segment(full)
+            with open(self._state_path, "w") as f:
+                json.dump({"started": False, "complete": True,
+                           "gen": self.gen, "last_index": si,
+                           "last_term": st}, f)
+            self.metrics.on_write("gc_meta", 64)
+            old.destroy()
+            offsets = [new_offs[e.index] for e in entries]
         return entries, offsets, si, st
 
     # ----------------------------------------------------------- snapshot
@@ -797,11 +994,21 @@ class NezhaEngine(EngineBase):
         li, lt = self.leveled.boundary
         return li, lt, self.leveled.snapshot_payload()
 
-    def install_snapshot(self, last_index: int, last_term: int, payload):
-        # A shipped snapshot supersedes everything local: abort any local
-        # GC/merge and reset the mutable modules (Raft discards the whole
-        # local log before installing, so active/new hold only superseded
-        # entries).
+    def install_snapshot(self, last_index: int, last_term: int, payload,
+                         keep_tail: bool = True):
+        """A shipped snapshot replaces the run hierarchy and everything at
+        or below its boundary; the raft tail PAST the boundary is retained
+        (rewritten into the fresh segment, like a run adoption's rotation)
+        because a resync snapshot can lag entries this follower already
+        applied — destroying those would silently regress the state
+        machine.  keep_tail=False (raft's term check at the boundary
+        failed: the local suffix is a divergent, necessarily-unapplied
+        lineage the node is discarding) drops the tail instead — keeping
+        it would leave stale duplicate indices in the fresh vlog for the
+        leader's re-sent entries to collide with at recovery.  Returns
+        {index: new vlog offset} for the retained tail so the raft node
+        can re-point its log.  Any local GC/merge is aborted: its
+        inputs/outputs are superseded."""
         if self._building is not None:
             self._building.destroy()
             self._building = None
@@ -810,21 +1017,30 @@ class NezhaEngine(EngineBase):
             self._merge["out"].destroy()
             self._merge = None
         self.gc_started, self.gc_completed = False, True
+        mods = {self.active.tag: self.active}
+        if self.new is not None:
+            mods[self.new.tag] = self.new
+        entries = []
+        if keep_tail:
+            tail = sorted((i, v) for i, v in self._seg_of_index.items()
+                          if i > last_index)
+            entries = [mods[tag].vlog.read_at(off) for _, (tag, off) in tail
+                       if tag in mods]
         if self.new is not None:
             self.new.destroy()
             self.new = None
-        self.active.destroy()
-        self._seg_of_index.clear()
+        old = self.active
         self._last_by_tag.clear()
-        self.gen += 1
-        self.active = StorageModule(self.dir, self.metrics,
-                                    f"m{self.gen:04d}", sync=self.sync,
-                                    group_commit=True, cache=self.cache)
+        self.active, new_offsets = self._build_tail_segment(entries)
         self.leveled.install_payload(payload, last_index, last_term)
-        self._gc_last = (last_index, last_term)
+        self._gc_last = max(self._gc_last, (last_index, last_term))
         with open(self._state_path, "w") as f:
             json.dump({"started": False, "complete": True, "gen": self.gen,
                        "last_index": last_index, "last_term": last_term}, f)
+        # deletion comes last: a crash anywhere above leaves the old
+        # segment for recovery's orphan purge / below-boundary repair
+        old.destroy()
+        return new_offsets
 
     def close(self):
         self.active.close()

@@ -23,6 +23,15 @@ class Metrics:
     fsyncs: int = 0
     cache_hits: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     bloom_skips: int = 0
+    # replication traffic this node put on (or took off) the wire, by kind:
+    #   'snapshot' — InstallSnapshot run-set payloads (sender side)
+    #   'sst'      — LSM-Raft shipped compacted SSTables (receiver side)
+    #   'run'      — run-shipping adoption records, per chunk per peer
+    #                (sender side)
+    # The single channel replaces the old ad-hoc 'snapshot_ship'/'sst_ship'
+    # tags so total replication bytes per node is one sum.
+    ship_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    ship_ops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     latencies_us: Dict[str, List[float]] = field(
         default_factory=lambda: defaultdict(list))
     # leveled-GC evidence: one record per completed GC unit of work —
@@ -48,6 +57,17 @@ class Metrics:
     def on_bloom_skip(self):
         """A point get skipped an SSTable entirely via its bloom filter."""
         self.bloom_skips += 1
+
+    def on_ship(self, kind: str, nbytes: int):
+        """One replication payload crossing the network ('snapshot', 'sst'
+        or 'run' — see ship_bytes).  Disk I/O caused by the payload is still
+        accounted separately through on_read/on_write."""
+        self.ship_bytes[kind] += nbytes
+        self.ship_ops[kind] += 1
+
+    def total_ship_bytes(self) -> int:
+        """All replication bytes this node shipped/adopted over the wire."""
+        return sum(self.ship_bytes.values())
 
     def on_gc_cycle(self, kind: str, nbytes: int, level: int, cycle: int):
         """One completed GC unit: an active-segment flush into L0
@@ -97,6 +117,7 @@ class Metrics:
             "fsyncs": self.fsyncs,
             "cache_hits": dict(self.cache_hits),
             "bloom_skips": self.bloom_skips,
+            "ship_bytes": dict(self.ship_bytes),
             "latency": lat,
         }
 

@@ -70,6 +70,32 @@ class InstallSnapshotReply:
     match_index: int
 
 
+@dataclass
+class ShipRun:
+    """One chunk of a run-adoption record (leader-driven GC replication).
+
+    `rec` is the adoption record metadata built by the engine when it seals
+    a run: kind ('flush'|'merge'), level, (last_index, last_term) run
+    boundary, boundary_before/boundary store boundaries, retire identities,
+    pos=(leader term, ship epoch), size and nchunks.  Chunks are resumable:
+    the follower acks its contiguous prefix and the leader retransmits from
+    there, so crashes/partitions/drops mid-ship never lose the record."""
+    term: int
+    leader: int
+    rec: dict
+    seq: int          # chunk number, 0-based
+    data: bytes
+
+
+@dataclass
+class ShipRunReply:
+    term: int
+    pos: Tuple[int, int]      # record this reply refers to
+    have: int                 # contiguous chunks buffered for that record
+    adopted: Tuple[int, int]  # follower's durable ship position
+    resync: bool = False      # fence tripped: please InstallSnapshot me
+
+
 class LogStoreBase:
     """Persistence interface the engines implement."""
 
@@ -138,6 +164,11 @@ class RaftNode:
         self.next_index: Dict[int, int] = {}
         self.match_index: Dict[int, int] = {}
         self.votes: set = set()
+        # run-shipping endpoints (wired by the cluster when the engine has
+        # run_shipping enabled): the leader's RunShipper streams sealed-run
+        # chunks, the follower's RunAdopter assembles + installs them
+        self.shipper = None
+        self.adopter = None
         self._reset_election_deadline()
         self._next_heartbeat = 0
         # metrics for tests
@@ -184,7 +215,11 @@ class RaftNode:
         self.voted_for = None
         self.votes = set()
         self._persist_meta()
-        self._reset_election_deadline()
+        # NOTE: no election-deadline reset here.  The timer resets only on
+        # granting a vote or on valid leader traffic (AppendEntries /
+        # InstallSnapshot / ShipRun); a bare term bump must not — otherwise
+        # a disruptive candidate with a stale log and a short timeout can
+        # reset everyone forever and no electable node ever stands.
 
     # ------------------------------------------------------------ client
     def client_put(self, key: bytes, value: bytes) -> Optional[int]:
@@ -238,9 +273,13 @@ class RaftNode:
             if now >= self._next_heartbeat:
                 self._broadcast_append()
                 self._next_heartbeat = now + self.heartbeat_every
+            if self.shipper is not None:
+                self.shipper.tick()
         elif now >= self.election_deadline:
             self._start_election()
         self._apply_committed()
+        if self.adopter is not None and self.role != LEADER:
+            self.adopter.tick()   # install pending records once applied
 
     # ---------------------------------------------------------- election
     def _start_election(self):
@@ -282,17 +321,30 @@ class RaftNode:
         for p in self.peers:
             self._send_append(p)
 
+    def send_snapshot_to(self, peer: int) -> bool:
+        """Ship the engine's snapshot (whole run set) to one peer — used
+        for log catch-up and as run shipping's fence-mismatch fallback."""
+        if self.snapshot_fn is None:
+            return False
+        snap = self.snapshot_fn()
+        if snap is None:
+            return False
+        li, lt, payload = snap
+        self.net.send(self.nid, peer, InstallSnapshot(
+            self.current_term, self.nid, li, lt, payload))
+        if self.shipper is not None:
+            # the snapshot carries the whole current run set: skip the
+            # peer's shipping cursor past every record it supersedes,
+            # once the matching install ack comes back
+            self.shipper.on_snapshot_sent(peer, li)
+        return True
+
     def _send_append(self, peer: int):
         ni = self.next_index.get(peer, self.last_log_index + 1)
         if ni <= self.snap_index:
             # follower is behind our snapshot -> ship it
-            if self.snapshot_fn is not None:
-                snap = self.snapshot_fn()
-                if snap is not None:
-                    li, lt, payload = snap
-                    self.net.send(self.nid, peer, InstallSnapshot(
-                        self.current_term, self.nid, li, lt, payload))
-                    return
+            if self.send_snapshot_to(peer):
+                return
             ni = self.snap_index + 1  # fallback (shouldn't happen)
         prev = ni - 1
         ents = [self._hydrated(i) for i in
@@ -316,6 +368,12 @@ class RaftNode:
             self._on_install_snapshot(src, msg)
         elif isinstance(msg, InstallSnapshotReply):
             self._on_snapshot_reply(src, msg)
+        elif isinstance(msg, ShipRun):
+            if self.adopter is not None:
+                self.adopter.on_chunk(src, msg)
+        elif isinstance(msg, ShipRunReply):
+            if self.shipper is not None:
+                self.shipper.on_reply(src, msg)
 
     def _on_request_vote(self, src: int, m: RequestVote):
         if m.term > self.current_term:
@@ -443,6 +501,15 @@ class RaftNode:
             self.store.commit_window()
 
     # ----------------------------------------------------------- snapshot
+    def repoint_offsets(self, new_offsets: Optional[Dict[int, int]]):
+        """The engine rewrote part of its log store (tail rotation on run
+        adoption / snapshot install): update the in-memory log's offsets
+        for every surviving index it re-homed."""
+        for i, off in (new_offsets or {}).items():
+            p = i - self.snap_index - 1
+            if 0 <= p < len(self.offsets):
+                self.offsets[p] = off
+
     def compact_to(self, index: int, term: int):
         """Drop in-memory log prefix covered by an engine snapshot."""
         if index <= self.snap_index:
@@ -462,13 +529,37 @@ class RaftNode:
         self.leader_id = m.leader
         self._reset_election_deadline()
         if m.last_index <= self.snap_index:
+            # already at (or past) this state: ack it anyway so the leader
+            # advances, and clear any adoption stuck waiting for a resync
+            if self.adopter is not None:
+                self.adopter.reset()
+            self.net.send(self.nid, src, InstallSnapshotReply(
+                self.current_term, self.snap_index))
             return
+        # Raft §7: when our log already holds the snapshot's last entry,
+        # retain the suffix past it — a resync snapshot may lag entries we
+        # have applied, and dropping them would regress the state machine
+        keep_suffix = (m.last_index <= self.last_log_index and
+                       self.term_at(m.last_index) == m.last_term)
+        new_offsets = None
         if self.install_snapshot_fn is not None:
-            self.install_snapshot_fn(m.last_index, m.last_term, m.payload)
-        self.entries = []
-        self.offsets = []
+            new_offsets = self.install_snapshot_fn(m.last_index, m.last_term,
+                                                   m.payload,
+                                                   keep_tail=keep_suffix)
+        if self.adopter is not None:
+            self.adopter.reset()   # the snapshot supersedes in-flight ships
+        if keep_suffix:
+            drop = m.last_index - self.snap_index
+            self.entries = self.entries[drop:]
+            self.offsets = self.offsets[drop:]
+        else:
+            self.entries = []
+            self.offsets = []
         self.snap_index = m.last_index
         self.snap_term = m.last_term
+        # the engine rewrote the retained tail into a fresh segment:
+        # re-point the surviving log at the new offsets
+        self.repoint_offsets(new_offsets)
         self.commit_index = max(self.commit_index, m.last_index)
         self.last_applied = max(self.last_applied, m.last_index)
         self.net.send(self.nid, src, InstallSnapshotReply(
@@ -480,3 +571,5 @@ class RaftNode:
         self.match_index[src] = max(self.match_index.get(src, 0),
                                     m.match_index)
         self.next_index[src] = self.match_index[src] + 1
+        if self.shipper is not None:
+            self.shipper.on_snapshot_acked(src, m.match_index)

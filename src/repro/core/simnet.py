@@ -25,13 +25,21 @@ class SimNet:
         self.down: set = set()         # crashed nodes
         self.sent_msgs = 0
         self.sent_bytes = 0
+        # every message the network discarded, whether refused at send time
+        # (down / partitioned / lossy link) or destroyed in-flight by a
+        # crash — the sender-visible signal that retry/resume logic (e.g.
+        # run-shipping chunk retransmission) must cover
+        self.dropped_msgs = 0
 
     def send(self, src: int, dst: int, msg: Any, size: int = 0):
         if src in self.down or dst in self.down:
+            self.dropped_msgs += 1
             return
         if frozenset((src, dst)) in self.blocked:
+            self.dropped_msgs += 1
             return
         if self.drop_prob and self.rng.random() < self.drop_prob:
+            self.dropped_msgs += 1
             return
         delay = self.rng.randint(self.min_delay, self.max_delay)
         self._seq += 1
@@ -63,6 +71,7 @@ class SimNet:
 
     def crash(self, nid: int):
         self.down.add(nid)
+        self.dropped_msgs += len(self._q[nid])   # in-flight mail vanishes
         self._q[nid].clear()
 
     def restart(self, nid: int):

@@ -342,15 +342,15 @@ class SortedStore:
         """Whole sorted file — Raft InstallSnapshot payload for catch-up."""
         with open(self.path, "rb") as f:
             data = f.read()
-        self.metrics.on_read("snapshot_ship", len(data))
+        self.metrics.on_ship("snapshot", len(data))
         return data
 
     def install_payload(self, payload: bytes, last_index: int,
-                        last_term: int):
+                        last_term: int, category: str = "snapshot_install"):
         self._reset_read_state()
         with open(self.path, "wb") as f:
             f.write(payload)
-        self.metrics.on_write("snapshot_install", len(payload))
+        self.metrics.on_write(category, len(payload))
         with open(self.meta_path, "w") as f:
             json.dump({"last_index": last_index, "last_term": last_term,
                        "complete": True}, f)
@@ -445,6 +445,16 @@ class LeveledStore:
         self.runs: List[SortedRun] = []      # newest first
         self.boundary: Tuple[int, int] = (0, 0)
         self.next_rid = 0
+        # manifest epoch: bumps on every committed membership mutation
+        # (add_l0 / commit_merge / adopt_run / install_payload).  A leader
+        # and a pure-adopter follower advance it in lock-step, which makes
+        # divergence between their run hierarchies observable.
+        self.epoch = 0
+        # run-shipping position: (leader term, ship epoch) of the newest
+        # adopted record — durable in the manifest, so a restarted follower
+        # resumes adoption exactly where it left off (stale or duplicated
+        # records are fenced out by comparing against this).
+        self.ship_pos: Tuple[int, int] = (0, 0)
         self.manifest_path = os.path.join(dirpath, self.MANIFEST)
 
     # ----------------------------------------------------------- manifest
@@ -452,6 +462,8 @@ class LeveledStore:
         tmp = self.manifest_path + ".tmp"
         data = {"next_rid": self.next_rid,
                 "boundary": list(self.boundary),
+                "epoch": self.epoch,
+                "ship_pos": list(self.ship_pos),
                 "runs": [{"rid": r.rid, "level": r.level,
                           "last_index": r.last_index,
                           "last_term": r.last_term} for r in self.runs]}
@@ -475,6 +487,8 @@ class LeveledStore:
             m = json.load(f)
         self.next_rid = m["next_rid"]
         self.boundary = tuple(m["boundary"])
+        self.epoch = m.get("epoch", 0)
+        self.ship_pos = tuple(m.get("ship_pos", (0, 0)))
         self.runs = []
         for spec in m["runs"]:
             run = SortedRun(self.dir, self.metrics, spec["rid"],
@@ -503,6 +517,7 @@ class LeveledStore:
         run.level = 0
         self.runs.insert(0, run)
         self.boundary = boundary
+        self.epoch += 1
         self._persist_manifest()
 
     def level_runs(self, level: int) -> List[SortedRun]:
@@ -523,9 +538,56 @@ class LeveledStore:
         self.runs = [r for r in self.runs if r.rid not in drop]
         self.runs.append(out_run)
         self.runs.sort(key=lambda r: r.last_index, reverse=True)
+        self.epoch += 1
         self._persist_manifest()
         for r in inputs:
             r.destroy()
+
+    # ------------------------------------------------------- run shipping
+    def export_run(self, run: SortedRun) -> bytes:
+        """Byte payload of one sealed run, for replication to followers."""
+        with open(run.path, "rb") as f:
+            data = f.read()
+        self.metrics.on_read("run_export", len(data))
+        return data
+
+    def adopt_run(self, level: int, last_index: int, last_term: int,
+                  data: bytes, retire: List[Tuple[int, int]],
+                  boundary: Tuple[int, int],
+                  ship_pos: Tuple[int, int]) -> SortedRun:
+        """Install a leader-sealed run wholesale and retire the same inputs
+        the leader consumed — the follower side of run shipping.
+
+        `retire` names inputs by logical identity (level, last_index) so
+        adoption survives local rid renumbering (e.g. after a snapshot
+        catch-up).  Raises ValueError when an input is missing — the fence
+        a diverged/lagging follower trips, falling back to snapshot
+        catch-up.  Crash-safe like commit_merge: the manifest swap commits
+        run + retirements + ship position atomically; files of retired
+        runs are deleted only after the swap (before it, the new file is
+        an orphan the next recovery prunes)."""
+        drop = []
+        for lvl, li in retire:
+            match = [r for r in self.runs
+                     if r.level == lvl and r.last_index == li]
+            if not match:
+                raise ValueError(f"adopt fence: no input run L{lvl}@{li}")
+            drop.append(match[0])
+        run = SortedRun(self.dir, self.metrics, self.alloc_rid(),
+                        level=level, cache=self.cache)
+        run.install_payload(data, last_index, last_term,
+                            category="run_adopt")
+        dropset = {r.rid for r in drop}
+        self.runs = [r for r in self.runs if r.rid not in dropset]
+        self.runs.append(run)
+        self.runs.sort(key=lambda r: r.last_index, reverse=True)
+        self.boundary = tuple(boundary)
+        self.ship_pos = tuple(ship_pos)
+        self.epoch += 1
+        self._persist_manifest()    # the adoption commit point
+        for r in drop:
+            r.destroy()
+        return run
 
     # --------------------------------------------------------------- reads
     def get(self, key: bytes) -> Optional[bytes]:
@@ -558,7 +620,7 @@ class LeveledStore:
         for r in self.runs:
             with open(r.path, "rb") as f:
                 data = f.read()
-            self.metrics.on_read("snapshot_ship", len(data))
+            self.metrics.on_ship("snapshot", len(data))
             out.append({"level": r.level, "last_index": r.last_index,
                         "last_term": r.last_term, "data": data})
         return out
@@ -583,6 +645,8 @@ class LeveledStore:
         new_runs.sort(key=lambda r: r.last_index, reverse=True)
         self.runs = new_runs
         self.boundary = (last_index, last_term)
+        self.epoch += 1
+        self.ship_pos = (0, 0)   # shipping restarts from the snapshot state
         self._persist_manifest()    # swap point
         for r in old_runs:
             r.destroy()

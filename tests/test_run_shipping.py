@@ -1,0 +1,531 @@
+"""Run-shipping replication: leader-driven GC with follower run adoption.
+
+Load-bearing claims under test:
+
+  * leader-only GC: with run_shipping on, follower gc_sorted /
+    gc_level_merge rewrite bytes stay 0 — sealed runs arrive as adoption
+    records instead
+  * equivalence: a follower-adopted store is byte-for-byte scan-equivalent
+    to a locally-GC'd follower AND to the leader, including across crash,
+    restart, and partition-during-ship schedules
+  * ordering: adoption never races ahead of the applied log; a snapshot
+    that lags the follower's applied state keeps the raft tail (no state
+    regression)
+  * resumability: chunks lost to crashes / partitions / lossy links are
+    retransmitted (SimNet.dropped_msgs is the sender-visible signal);
+    fence mismatches fall back to InstallSnapshot without divergence
+"""
+import os
+import tempfile
+
+from repro.core.cluster import Cluster
+from repro.core.engines import NezhaEngine, _ShippedLSM
+from repro.core.metrics import Metrics
+from repro.core.simnet import SimNet
+from repro.core.valuelog import KIND_PUT, LogEntry
+
+HI = b"\xff" * 9
+
+
+def make_ship_cluster(seed=5, drop_prob=0.0, n_nodes=3, **ekw):
+    kw = {"gc_threshold": 16 << 10, "gc_batch": 64, "level_fanout": 2,
+          "run_shipping": True}
+    kw.update(ekw)
+    wd = tempfile.mkdtemp(prefix="runship_")
+    return Cluster(n=n_nodes, engine="nezha", workdir=wd, seed=seed,
+                   drop_prob=drop_prob, engine_kwargs=kw)
+
+
+def load(c, n, start=0, vsize=400):
+    items = [(f"user{i:06d}".encode(), bytes([(i * 7) % 256]) * vsize)
+             for i in range(start, start + n)]
+    c.put_many(items, window=32)
+    return dict(items)
+
+
+def settle(c):
+    ld = c.elect()
+    c.engines[ld.nid].run_gc_to_completion()
+    assert c.drain_shipping(max_ticks=12000)
+    return c.elect()
+
+
+def put(eng, key, value, term=1, apply=True):
+    idx = getattr(eng, "_t_index", 0) + 1
+    eng._t_index = idx
+    e = LogEntry(term, idx, KIND_PUT, key, value)
+    off = eng.append(e)
+    if apply:
+        eng.apply(e, off)
+    return idx
+
+
+def flush_active(eng, step=256):
+    eng.start_gc()
+    while not eng.gc_completed:
+        eng.gc_step(step)
+
+
+# --------------------------------------------------------- SimNet satellite
+def test_simnet_drops_are_sender_visible():
+    """Every discarded message — refused at send (down / partitioned /
+    lossy) or destroyed in-flight by a crash — bumps dropped_msgs."""
+    net = SimNet([0, 1, 2], seed=1)
+    net.send(0, 1, "a")
+    net.send(0, 1, "b")
+    assert net.dropped_msgs == 0
+    net.crash(1)                      # two messages were still in flight
+    assert net.dropped_msgs == 2
+    net.send(0, 1, "c")               # refused: receiver is down
+    assert net.dropped_msgs == 3
+    net.restart(1)
+    net.partition(0, 1)
+    net.send(0, 1, "d")               # refused: link blocked
+    assert net.dropped_msgs == 4
+    net.heal()
+    lossy = SimNet([0, 1], seed=2, drop_prob=1.0)
+    lossy.send(0, 1, "e")             # refused: lossy link
+    assert lossy.dropped_msgs == 1
+
+
+# ------------------------------------------------------- on_ship satellite
+def test_on_ship_channel_unifies_replication_tags():
+    """snapshot shipping, SST shipping and run shipping all account their
+    wire bytes through Metrics.on_ship — one sum per node."""
+    wd = tempfile.mkdtemp()
+    m = Metrics()
+    eng = NezhaEngine(wd, m, gc_threshold=1 << 60)
+    for i in range(60):
+        put(eng, f"key{i:04d}".encode(), bytes([i]) * 64)
+    flush_active(eng)
+    payload = eng.leveled.snapshot_payload()
+    assert m.ship_bytes["snapshot"] == sum(len(p["data"]) for p in payload)
+    assert "snapshot_ship" not in m.read_bytes    # old ad-hoc tag retired
+    eng.close()
+
+    wd2 = tempfile.mkdtemp()
+    m2 = Metrics()
+    db = _ShippedLSM(wd2, m2, wal=False)
+    for i in range(50):
+        db.put(f"k{i:03d}".encode(), b"v" * 32)
+    db.flush()
+    db.compact()
+    assert m2.ship_bytes["sst"] > 0
+    assert m2.ship_bytes["sst"] == m2.write_bytes["sst_ship"]
+    assert m2.total_ship_bytes() == sum(m2.ship_bytes.values())
+    db.destroy()
+
+
+# ------------------------------------------------------------ the tentpole
+def test_leader_only_gc_followers_adopt():
+    """Followers re-run zero GC: their rewrite counters stay 0 while their
+    run hierarchy and scans converge to the leader's exactly."""
+    c = make_ship_cluster(seed=5)
+    model = load(c, 200, vsize=512)
+    ld = settle(c)
+    le = c.engines[ld.nid]
+    assert le.gc_count >= 2
+    assert c.metrics[ld.nid].ship_bytes["run"] > 0
+    lscan = le.scan(b"", HI)
+    assert dict(lscan) == model
+    for f in range(c.n):
+        if f == ld.nid:
+            continue
+        m, fe = c.metrics[f], c.engines[f]
+        assert m.write_bytes.get("gc_sorted", 0) == 0
+        assert m.write_bytes.get("gc_level_merge", 0) == 0
+        assert [(r.level, r.last_index) for r in fe.leveled.runs] == \
+            [(r.level, r.last_index) for r in le.leveled.runs]
+        assert fe.scan(b"", HI) == lscan
+    rep = c.replication_report()
+    assert all(r["gc_flush_bytes"] == 0 for r in rep
+               if r["role"] == "follower")
+    c.destroy()
+
+
+def test_adopted_follower_matches_local_gc_follower():
+    """A/B: same workload with run shipping on vs off — the adopted
+    follower store is byte-for-byte scan-equivalent to the locally-GC'd
+    one (and both match their leaders)."""
+    scans = {}
+    for mode in (True, False):
+        c = make_ship_cluster(seed=13, run_shipping=mode)
+        load(c, 180, vsize=512)
+        ld = settle(c) if mode else c.elect()
+        if not mode:
+            c.engines[ld.nid].run_gc_to_completion()
+            for _ in range(400):
+                c.tick()
+                if all(c.nodes[p].last_applied >= ld.commit_index
+                       for p in ld.peers):
+                    break
+        le = c.engines[ld.nid]
+        fol = [c.engines[f].scan(b"", HI) for f in range(c.n)
+               if f != ld.nid]
+        assert all(s == le.scan(b"", HI) for s in fol)
+        scans[mode] = le.scan(b"", HI)
+        if mode:    # the local-GC baseline actually did follower GC
+            assert all(c.metrics[f].write_bytes.get("gc_sorted", 0) == 0
+                       for f in range(c.n) if f != ld.nid)
+        c.destroy()
+    assert scans[True] == scans[False]
+
+
+def test_follower_tail_survives_adoption_and_restart():
+    """Entries past the adopted boundary (the rewritten raft tail) stay
+    readable, truncatable and durable across a follower restart."""
+    c = make_ship_cluster(seed=7)
+    load(c, 150, vsize=512)
+    ld = settle(c)
+    # at least one follower took the adoption path (the other may have
+    # been caught up by a log-compaction snapshot): test the adopter
+    fid = max((i for i in range(c.n) if i != ld.nid),
+              key=lambda i: c.engines[i].adopt_count)
+    fe = c.engines[fid]
+    assert fe.adopt_count >= 1
+    # the tail segment holds only post-boundary entries
+    boundary = fe.leveled.boundary[0]
+    assert all(i > boundary for i in fe._seg_of_index)
+    model = load(c, 30, start=150)       # post-adoption traffic
+    for _ in range(200):
+        c.tick()
+        if c.nodes[fid].last_applied >= c.elect().commit_index:
+            break
+    c.crash(fid)
+    c.restart(fid)
+    for _ in range(400):
+        c.tick()
+        if c.nodes[fid].last_applied >= c.elect().commit_index:
+            break
+    ld = c.elect()
+    assert c.engines[fid].scan(b"", HI) == c.engines[ld.nid].scan(b"", HI)
+    for k, v in list(model.items())[:5]:
+        assert c.engines[fid].get(k) == v
+    c.destroy()
+
+
+# ------------------------------------------------- fault schedules / resume
+def test_partition_during_ship_resumes_chunks():
+    """Chunks dropped while a follower is partitioned (sender-visible via
+    dropped_msgs) are retransmitted after heal and the SAME record is
+    adopted — no snapshot needed for a log-complete follower."""
+    c = make_ship_cluster(seed=9, gc_threshold=1 << 60)
+    load(c, 120, vsize=512)
+    ld = c.elect()
+    fid = [i for i in range(c.n) if i != ld.nid][0]
+    # everyone is log-complete; now cut one follower off and seal a run
+    for _ in range(100):
+        c.tick()
+        if all(c.nodes[p].last_applied >= ld.commit_index
+               for p in ld.peers):
+            break
+    c.net.partition(ld.nid, fid)
+    le = c.engines[ld.nid]
+    le.start_gc()
+    le.run_gc_to_completion()
+    dropped0 = c.net.dropped_msgs
+    adopted0 = c.engines[fid].adopt_count
+    snap0 = c.metrics[ld.nid].ship_bytes.get("snapshot", 0)
+    # short window: at least one chunk volley is dropped, but the follower
+    # does not reach its election timeout (leadership stays put)
+    for _ in range(14):
+        c.tick()      # ship attempts at the partitioned peer are dropped
+    assert c.net.dropped_msgs > dropped0
+    assert c.engines[fid].adopt_count == adopted0
+    c.net.heal()
+    assert c.drain_shipping(max_ticks=6000)
+    assert c.engines[fid].adopt_count > adopted0     # chunk resume, not
+    assert c.metrics[ld.nid].ship_bytes.get("snapshot", 0) == snap0  # snap
+    ld = c.elect()
+    assert c.engines[fid].scan(b"", HI) == c.engines[ld.nid].scan(b"", HI)
+    c.destroy()
+
+
+def test_crash_restart_during_ship_converges():
+    """Crash a follower while records are in flight (in-flight chunks are
+    destroyed — dropped_msgs says so), write more through two further GC
+    cycles, restart: the follower converges with zero local GC."""
+    c = make_ship_cluster(seed=11)
+    load(c, 120, vsize=512)
+    ld = c.elect()
+    fid = [i for i in range(c.n) if i != ld.nid][0]
+    dropped0 = c.net.dropped_msgs
+    c.crash(fid)
+    assert c.net.dropped_msgs >= dropped0
+    load(c, 120, start=120, vsize=512)   # leader keeps GC-ing + shipping
+    c.restart(fid)
+    ld = settle(c)
+    fe = c.engines[fid]
+    assert c.metrics[fid].write_bytes.get("gc_sorted", 0) == 0
+    assert fe.scan(b"", HI) == c.engines[ld.nid].scan(b"", HI)
+    assert [r.last_index for r in fe.leveled.runs] == \
+        [r.last_index for r in c.engines[ld.nid].leveled.runs]
+    c.destroy()
+
+
+def test_chaos_lossy_network_linearizable_and_convergent():
+    """Satellite: seeded drop_prob chaos over put/GC/ship traffic — reads
+    of every committed key are the latest committed value, and every
+    node's run SET (not just scan contents) eventually converges."""
+    for seed, dp in ((3, 0.05), (21, 0.1)):
+        c = make_ship_cluster(seed=seed, drop_prob=dp)
+        model = load(c, 150)
+        model.update(load(c, 50, start=100))    # overwrites: latest wins
+        ld = settle(c)
+        le = c.engines[ld.nid]
+        assert all(le.get(k) == v for k, v in model.items())
+        assert dict(le.scan(b"", HI)) == model
+        runsets = {tuple((r.level, r.last_index) for r in e.leveled.runs)
+                   for e in c.engines}
+        assert len(runsets) == 1, runsets
+        lscan = le.scan(b"", HI)
+        assert all(c.engines[f].scan(b"", HI) == lscan
+                   for f in range(c.n) if f != ld.nid)
+        assert c.net.dropped_msgs > 0    # the schedule actually lost mail
+        assert all(c.metrics[f].write_bytes.get("gc_sorted", 0) == 0
+                   for f in range(c.n) if f != ld.nid)
+        c.destroy()
+
+
+def test_leader_crash_failover_ships_from_new_lineage():
+    """Kill the leader mid-shipping: a follower that got its state via
+    adoption takes over, runs GC itself, and ships from its own lineage;
+    the deposed leader returns, is fenced/resynced, and converges."""
+    c = make_ship_cluster(seed=9)
+    model = dict(load(c, 150))
+    old = c.elect()
+    c.crash(old.nid)
+    model.update(load(c, 100, start=100, vsize=444))   # overwrites
+    c.restart(old.nid)
+    ld = settle(c)
+    le = c.engines[ld.nid]
+    assert ld.nid != old.nid
+    assert all(le.get(k) == v for k, v in model.items())
+    lscan = le.scan(b"", HI)
+    assert all(c.engines[f].scan(b"", HI) == lscan
+               for f in range(c.n) if f != ld.nid)
+    # the always-follower node never rewrote a byte of GC work
+    bystander = [i for i in range(c.n) if i not in (ld.nid, old.nid)][0]
+    assert c.metrics[bystander].write_bytes.get("gc_sorted", 0) == 0
+    c.destroy()
+
+
+# ------------------------------------------------------- fencing / fallback
+def test_adopt_fences_reject_divergence_and_staleness():
+    """Engine-level: adoption refuses stale records, mismatched manifests
+    and concurrent local GC — the RunAdopter then requests a resync."""
+    src = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60,
+                      run_shipping=True)
+    records = []
+    src.ship_hook = lambda rec, data: records.append((rec, data))
+    src.raft_role = lambda: True
+    for i in range(80):
+        put(src, f"key{i:04d}".encode(), bytes([i]) * 64)
+    flush_active(src)
+    rec, data = records[0]
+    rec = dict(rec, pos=(1, 1))
+
+    fol = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60,
+                      run_shipping=True)
+    for i in range(80):
+        put(fol, f"key{i:04d}".encode(), bytes([i]) * 64)
+    # diverged follower: it ran local GC, boundary no longer (0, 0)
+    flush_active(fol)
+    ok, _ = fol.adopt_run(rec, data)
+    assert not ok
+    fol.close()
+
+    fol2 = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60,
+                       run_shipping=True)
+    for i in range(80):
+        put(fol2, f"key{i:04d}".encode(), bytes([i]) * 64)
+    ok, _ = fol2.adopt_run(dict(rec, runs_before=3), data)
+    assert not ok      # structural gap: records were missed in between
+    ok, offsets = fol2.adopt_run(rec, data)      # clean adoption
+    assert ok and offsets == {}                  # no tail past boundary
+    assert fol2.leveled.ship_pos == (1, 1)
+    ok, _ = fol2.adopt_run(rec, data)            # duplicate: fenced
+    assert not ok
+    assert dict(fol2.scan(b"", HI)) == dict(src.scan(b"", HI))
+    fol2.close()
+    src.close()
+
+
+def test_adopt_flush_and_merge_records_engine_level():
+    """Direct record replay: flushes then a merge (with retire list) give
+    the follower the leader's exact hierarchy, and the follower's raft
+    tail past the boundary is rewritten, applied and truncatable."""
+    src = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60,
+                      level_fanout=2, run_shipping=True)
+    records = []
+    src.ship_hook = lambda rec, data: records.append(
+        (dict(rec, pos=(1, len(records) + 1)), data))
+    src.raft_role = lambda: True
+    model = {}
+    for r in range(2):
+        for i in range(40):
+            k = f"key{(r * 40 + i):04d}".encode()
+            v = bytes([(r * 40 + i) % 256]) * 64
+            put(src, k, v)
+            model[k] = v
+        flush_active(src)
+    src.run_gc_to_completion()          # fanout=2 -> one merge record
+    kinds = [rec["kind"] for rec, _ in records]
+    assert kinds == ["flush", "flush", "merge"]
+    assert records[2][0]["retire"], "merge record must retire its inputs"
+
+    fol = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60,
+                      level_fanout=2, run_shipping=True)
+    for k, v in model.items():
+        put(fol, k, v)
+    put(fol, b"tail-key", b"tail-value")          # past every boundary
+    for rec, data in records:
+        ok, offsets = fol.adopt_run(rec, data)
+        assert ok, rec
+    assert [(r.level, r.last_index) for r in fol.leveled.runs] == \
+        [(r.level, r.last_index) for r in src.leveled.runs]
+    # the manifest epoch advances in lock-step on the pure adoption path:
+    # leader seals and follower adoptions are the same mutation count
+    assert fol.leveled.epoch == src.leveled.epoch
+    assert fol.get(b"tail-key") == b"tail-value"  # rewritten tail applied
+    expect = dict(model)
+    expect[b"tail-key"] = b"tail-value"
+    assert dict(fol.scan(b"", HI)) == expect
+    assert c_metrics_gc(fol) == 0
+    fol.close()
+    src.close()
+
+
+def c_metrics_gc(eng):
+    return eng.metrics.write_bytes.get("gc_sorted", 0) + \
+        eng.metrics.write_bytes.get("gc_level_merge", 0)
+
+
+def test_adoption_survives_crash_between_manifest_and_rotation():
+    """Crash after the run-adoption manifest commit but before the active
+    rotation commit: recovery serves every key (run + old segment overlap
+    is read-tolerated) and the next adoption still lands."""
+    src = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60,
+                      run_shipping=True)
+    records = []
+    src.ship_hook = lambda rec, data: records.append(
+        (dict(rec, pos=(1, len(records) + 1)), data))
+    src.raft_role = lambda: True
+    model = {}
+    for r in range(2):
+        for i in range(40):
+            k = f"key{(r * 40 + i):04d}".encode()
+            v = bytes([(r * 40 + i) % 256]) * 64
+            put(src, k, v)
+            model[k] = v
+        flush_active(src)
+
+    wd = tempfile.mkdtemp()
+    fol = NezhaEngine(wd, Metrics(), gc_threshold=1 << 60,
+                      run_shipping=True)
+    for k, v in model.items():
+        put(fol, k, v)
+    orig = NezhaEngine._retire_active_prefix
+
+    def crash_before_rotation(self, li, lt):
+        raise RuntimeError("simulated crash")
+
+    NezhaEngine._retire_active_prefix = crash_before_rotation
+    try:
+        try:
+            fol.adopt_run(*records[0])
+        except RuntimeError:
+            pass
+    finally:
+        NezhaEngine._retire_active_prefix = orig
+    fol.close()
+
+    fol2 = NezhaEngine(wd, Metrics(), gc_threshold=1 << 60,
+                       run_shipping=True)
+    entries, offsets, si, _ = fol2.recover()
+    assert si == records[0][0]["last_index"]     # manifest committed
+    for e, off in zip(entries, offsets):
+        fol2.apply(e, off)
+    assert dict(fol2.scan(b"", HI)) == model     # overlap tolerated
+    ok, _ = fol2.adopt_run(*records[1])          # next record still lands
+    assert ok
+    assert dict(fol2.scan(b"", HI)) == model
+    fol2.close()
+    src.close()
+
+
+def test_install_crash_between_manifest_swap_and_rotation_repairs():
+    """Crash after InstallSnapshot's manifest swap but before the segment
+    rotation commit: recovery must rebuild the active segment tail-only,
+    or its stale applied records would shadow the newer run data the
+    snapshot carried."""
+    import pytest
+    from repro.core.storage import LeveledStore
+    src = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60)
+    for i in range(30):
+        put(src, f"key{i:04d}".encode(), b"OLD " + bytes([i]) * 32)
+    for i in range(30):                      # overwrites: indices 31..60
+        put(src, f"key{i:04d}".encode(), b"NEW " + bytes([i]) * 32)
+    flush_active(src)
+    li, lt, payload = src.snapshot()
+
+    wd = tempfile.mkdtemp()
+    fol = NezhaEngine(wd, Metrics(), gc_threshold=1 << 60)
+    for i in range(30):                      # applied only the OLD prefix
+        put(fol, f"key{i:04d}".encode(), b"OLD " + bytes([i]) * 32)
+    orig = LeveledStore.install_payload
+
+    def crash_after_swap(self, *a, **k):
+        orig(self, *a, **k)
+        raise RuntimeError("simulated crash")
+
+    fol.leveled.install_payload = crash_after_swap.__get__(fol.leveled)
+    with pytest.raises(RuntimeError):
+        fol.install_snapshot(li, lt, payload, keep_tail=False)
+    fol.close()
+
+    fol2 = NezhaEngine(wd, Metrics(), gc_threshold=1 << 60)
+    _, _, si, _ = fol2.recover()
+    assert si == li
+    assert fol2.get(b"key0005") == b"NEW " + bytes([5]) * 32   # not OLD
+    assert dict(fol2.scan(b"", HI)) == dict(src.scan(b"", HI))
+    assert fol2._seg_of_index == {}          # tail-only rebuild
+    fol2.close()
+    src.close()
+
+
+def test_install_snapshot_retains_applied_tail():
+    """The regression fence: a (resync) snapshot whose boundary lags the
+    follower's applied state must keep the applied tail — state machine
+    contents never move backwards."""
+    src = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60)
+    for i in range(60):
+        put(src, f"key{i:04d}".encode(), bytes([i]) * 64)
+    flush_active(src)            # boundary at index 60
+    li, lt, payload = src.snapshot()
+
+    fol = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60)
+    for i in range(60):
+        put(fol, f"key{i:04d}".encode(), bytes([i]) * 64)
+    for i in range(60, 80):      # applied past the snapshot boundary
+        put(fol, f"key{i:04d}".encode(), b"T" * 32)
+    offsets = fol.install_snapshot(li, lt, payload)
+    assert set(offsets) == set(range(61, 81))
+    for i in range(60, 80):      # the applied tail survived the install
+        assert fol.get(f"key{i:04d}".encode()) == b"T" * 32
+    assert fol.get(b"key0010") == bytes([10]) * 64
+    assert len(fol.scan(b"", HI)) == 80
+    fol.close()
+
+    # divergent lineage: raft's term check at the boundary failed, the
+    # (necessarily unapplied) local suffix is discarded with the log —
+    # keeping it would plant stale duplicate indices in the fresh vlog
+    fol2 = NezhaEngine(tempfile.mkdtemp(), Metrics(), gc_threshold=1 << 60)
+    for i in range(40):
+        put(fol2, f"old{i:04d}".encode(), b"x" * 16, apply=False)
+    offsets = fol2.install_snapshot(li, lt, payload, keep_tail=False)
+    assert offsets == {}
+    assert fol2._seg_of_index == {}
+    assert dict(fol2.scan(b"", HI)) == dict(src.scan(b"", HI))
+    fol2.close()
+    src.close()
