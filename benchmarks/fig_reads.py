@@ -1,0 +1,138 @@
+"""Fig. READS — the consistency-tier ladder and follower-read scaling.
+
+Two claims under measurement:
+
+  1. The tier ladder prices reads correctly: LINEARIZABLE pays one
+     heartbeat-quorum round per read when serial, ~1/B rounds per read
+     when batched (one round confirms the whole queue), and LEASE pays
+     ZERO rounds under a stable leader.  Evidence is read_report()'s
+     quorum-round counters, not just wall clock.
+  2. SESSION reads turn followers into read capacity: with run shipping
+     (the NezhaEngine default) every follower holds the leader's exact
+     sealed-run sets, so session scans are byte-equal with the leader and
+     aggregate scan throughput scales with cluster size (n=3 and n=5 vs
+     the leader-only baseline).
+
+Scaling model: the cluster is a single-process discrete-event sim, so the
+spread configuration cannot literally run nodes in parallel.  Session
+reads do zero cross-node work (each node serves from its own engine), so
+ideal-parallel aggregate throughput is computed from per-node busy time:
+K scans spread round-robin over n nodes => K / max(per-node busy seconds).
+The leader-only baseline is the same K scans all on the leader.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from collections import defaultdict
+
+from benchmarks import common
+from repro.core.client import LEASE, SESSION
+from repro.core.cluster import Cluster
+
+N_KEYS = 900 if common.FULL else 360
+VSIZE = 512
+N_GETS = 120 if common.FULL else 48
+N_SCANS = 60 if common.FULL else 24
+HI = b"\xff" * 11
+
+
+def _load(nn: int, n_keys: int, vsize: int, gc_threshold: int, seed: int):
+    wd = tempfile.mkdtemp(prefix=f"reads_n{nn}_")
+    c = Cluster(n=nn, engine="nezha", workdir=wd, seed=seed,
+                engine_kwargs={"gc_threshold": gc_threshold,
+                               "gc_batch": 128, "level_fanout": 2})
+    items = common.keys_values(n_keys, vsize)
+    c.put_many(items)
+    ld = c.elect()
+    c.engines[ld.nid].run_gc_to_completion()
+    c.drain_shipping()
+    return c, items
+
+
+def _rounds(c: Cluster) -> int:
+    return sum(m.read_quorum_rounds for m in c.metrics)
+
+
+def run(n_keys=None, vsize=None, n_gets=None, n_scans=None, sizes=(3, 5),
+        seed=13):
+    n_keys = n_keys or N_KEYS
+    vsize = vsize or VSIZE
+    n_gets = n_gets or N_GETS
+    n_scans = n_scans or N_SCANS
+    gc_threshold = max((n_keys // 6) * vsize, 16 << 10)
+    rows = []
+
+    # ---- tier ladder: per-read cost at n=3 --------------------------------
+    c, items = _load(3, n_keys, vsize, gc_threshold, seed)
+    keys = [k for k, _ in items]
+    sample = [keys[(i * 7919) % len(keys)] for i in range(n_gets)]
+
+    r0 = _rounds(c)
+    dt, _ = common.timed(lambda: [c.get(k) for k in sample])
+    rounds = _rounds(c) - r0
+    rows.append(("fig_reads/linearizable", 1e6 * dt / n_gets,
+                 f"ops_s={n_gets / dt:.0f};quorum_rounds={rounds}"
+                 f";rounds_per_read={rounds / n_gets:.2f}"))
+
+    r0 = _rounds(c)
+    batch = 16
+    dt, _ = common.timed(lambda: [
+        c.client.get_many(sample[i:i + batch])
+        for i in range(0, n_gets, batch)])
+    rounds = _rounds(c) - r0
+    rows.append(("fig_reads/linearizable_batched", 1e6 * dt / n_gets,
+                 f"ops_s={n_gets / dt:.0f};quorum_rounds={rounds}"
+                 f";rounds_per_read={rounds / n_gets:.2f};batch={batch}"))
+
+    c.get(sample[0], LEASE)        # may pay one round to (re)arm the lease
+    r0 = _rounds(c)
+    dt, _ = common.timed(lambda: [c.get(k, LEASE) for k in sample])
+    rounds = _rounds(c) - r0
+    rows.append(("fig_reads/lease", 1e6 * dt / n_gets,
+                 f"ops_s={n_gets / dt:.0f};quorum_rounds={rounds}"
+                 f";rounds_per_read={rounds / n_gets:.2f}"))
+    common.destroy(c)
+
+    # ---- follower-read scaling: session scans at n=3 / n=5 ----------------
+    for nn in sizes:
+        c, _ = _load(nn, n_keys, vsize, gc_threshold, seed)
+        ld = c.elect()
+        ses = c.session()
+        ses.observe(ld.last_applied)
+        lscan = c.engines[ld.nid].scan(b"", HI)
+        equal = all(c.scan(b"", HI, SESSION, session=ses, node=f) == lscan
+                    for f in range(nn) if f != ld.nid)
+
+        # leader-only baseline: every scan serializes through one node
+        dt, _ = common.timed(lambda: [
+            c.scan(b"", HI, SESSION, session=ses, node=ld.nid)
+            for _ in range(n_scans)])
+        base = n_scans / dt
+        rows.append((f"fig_reads/n{nn}/leader_only", 1e6 * dt / n_scans,
+                     f"scans_s={base:.0f};nodes=1"))
+
+        # spread: round-robin over every live node, ideal-parallel
+        # throughput = K / max per-node busy time (see module docstring)
+        busy = defaultdict(float)
+        order = list(range(nn))
+        for j in range(n_scans):
+            nid = order[j % nn]
+            t0 = time.perf_counter()
+            c.scan(b"", HI, SESSION, session=ses, node=nid)
+            busy[nid] += time.perf_counter() - t0
+        agg = n_scans / max(busy.values())
+        rep = c.read_report()
+        fol_serves = sum(r["follower_serves"] for r in rep)
+        rows.append((
+            f"fig_reads/n{nn}/session_spread",
+            1e6 * max(busy.values()) / n_scans,
+            f"scans_s={agg:.0f};nodes={nn};scaling_x={agg / base:.2f}"
+            f";scan_equal={int(equal)};follower_serves={fol_serves}"
+            f";session_stalls={sum(r['session_stalls'] for r in rep)}"))
+        common.destroy(c)
+    return rows
+
+
+if __name__ == "__main__":
+    common.emit(run())

@@ -25,7 +25,11 @@ def smoke() -> int:
          while sustaining puts through multiple GC cycles,
       4. run shipping (fig_runship at smoke scale) keeps follower GC flush
          bytes at ~0 and cuts cluster-wide GC rewrite work vs the local-GC
-         baseline, with leader/follower scans byte-identical.
+         baseline, with leader/follower scans byte-identical,
+      5. the consistency-tiered read API (fig_reads at smoke scale):
+         SESSION reads served by followers return byte-equal scans vs the
+         leader, and LEASE reads perform ZERO heartbeat-quorum rounds
+         under a stable leader.
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
@@ -76,6 +80,14 @@ def smoke() -> int:
     rs = {name.split("/")[-1]: common.parse_derived(d)
           for name, _, d in rs_rows}
 
+    # fig_reads at smoke scale: the consistency-tier ladder
+    from benchmarks import fig_reads
+    rd_rows = fig_reads.run(n_keys=120, n_gets=24, n_scans=12, sizes=(3,))
+    for name, us, derived in rd_rows:
+        show(name.replace("fig_reads", "smoke_reads"), us, derived)
+    rd = {name.split("/", 1)[-1]: common.parse_derived(d)
+          for name, _, d in rd_rows}
+
     ok = True
     if wa["nezha"] > wa["original"]:
         show("smoke/FAIL", 0, f"nezha_wa={wa['nezha']:.2f}_exceeds_"
@@ -107,6 +119,17 @@ def smoke() -> int:
              f"{rs['shipped'].get('cluster_gc_bytes'):.0f}_vs_local="
              f"{rs['local'].get('cluster_gc_bytes'):.0f}")
         ok = False
+    if rd["lease"].get("quorum_rounds", 1) != 0:
+        show("smoke/FAIL", 0, "lease_reads_paid_quorum_rounds="
+             f"{rd['lease'].get('quorum_rounds', 1):.0f}"
+             "_under_stable_leader")
+        ok = False
+    if rd["n3/session_spread"].get("scan_equal") != 1:
+        show("smoke/FAIL", 0, "session_follower_scan_diverged_from_leader")
+        ok = False
+    if rd["n3/session_spread"].get("follower_serves", 0) <= 0:
+        show("smoke/FAIL", 0, "session_reads_never_served_by_a_follower")
+        ok = False
     if ok:
         show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
              f";original_wa={wa['original']:.2f}"
@@ -115,7 +138,10 @@ def smoke() -> int:
              f";gc_flush={gc_stats.get('gc_flush_first'):.0f}->"
              f"{gc_stats.get('gc_flush_last'):.0f}"
              f";runship_cluster_gc={rs['local'].get('cluster_gc_bytes'):.0f}"
-             f"->{rs['shipped'].get('cluster_gc_bytes'):.0f}")
+             f"->{rs['shipped'].get('cluster_gc_bytes'):.0f}"
+             f";lease_rounds={rd['lease'].get('quorum_rounds', 1):.0f}"
+             f";session_scaling_x="
+             f"{rd['n3/session_spread'].get('scaling_x', 0):.2f}")
     common.write_artifact("smoke", rows)
     return 0 if ok else 1
 
@@ -134,7 +160,7 @@ def main() -> None:
     from benchmarks import (common, fig4_put, fig5_get, fig6_scan,
                             fig7_scan_length, fig8_ycsb, fig9_scalability,
                             fig10_gc_impact, fig11_recovery, fig12_batching,
-                            fig_runship, roofline)
+                            fig_reads, fig_runship, roofline)
 
     suites = {
         "fig4": lambda: fig4_put.run()[0],
@@ -146,6 +172,7 @@ def main() -> None:
         "fig10": fig10_gc_impact.run,
         "fig11": fig11_recovery.run,
         "fig12": fig12_batching.run,
+        "fig_reads": fig_reads.run,
         "fig_runship": fig_runship.run,
         "roofline": roofline.run,
     }

@@ -1,6 +1,14 @@
 """In-process Raft cluster: N nodes, each with its own engine directory and
 byte-accounted metrics; deterministic fault injection (crash / restart /
-partition) and client operations routed through the leader.
+partition).
+
+Client operations are thin wrappers over the consistency-tiered
+NezhaClient (repro.core.client): writes loop-retry through the leader,
+reads default to LINEARIZABLE (ReadIndex) and accept
+`consistency=`/`session=`/`node=` for the LEASE and SESSION tiers —
+`Cluster.get`/`scan` no longer touch any engine directly, because a
+deposed leader's engine can serve stale state (see
+tests/test_client_reads.py for the regression that proves it).
 
 Recovery semantics: a restarted node reloads its engine from disk
 (engine.recover()), reconstructs the Raft log tail, and re-applies committed
@@ -14,6 +22,7 @@ import shutil
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.client import NezhaClient, Session
 from repro.core.engines import ENGINES, NezhaEngine
 from repro.core.metrics import Metrics
 from repro.core.raft import LEADER, RaftNode
@@ -26,7 +35,8 @@ class Cluster:
                  seed: int = 0, sync: bool = False, leader_hint: int = 0,
                  engine_kwargs: Optional[dict] = None, heartbeat_every: int = 5,
                  election_timeout=(20, 40), max_batch: int = 64,
-                 drop_prob: float = 0.0):
+                 drop_prob: float = 0.0, lease_ticks: Optional[int] = None,
+                 default_consistency: str = "linearizable"):
         self.n = n
         self.engine_name = engine
         self.workdir = workdir
@@ -36,6 +46,7 @@ class Cluster:
         self.heartbeat_every = heartbeat_every
         self.election_timeout = election_timeout
         self.max_batch = max_batch
+        self.lease_ticks = lease_ticks
         os.makedirs(workdir, exist_ok=True)
         self.net = SimNet(list(range(n)), seed=seed, drop_prob=drop_prob)
         self.metrics: List[Metrics] = [Metrics() for _ in range(n)]
@@ -44,6 +55,8 @@ class Cluster:
         self.leader_hint = leader_hint
         for i in range(n):
             self._make_node(i, fresh=True)
+        self.client = NezhaClient(self,
+                                  default_consistency=default_consistency)
 
     # ------------------------------------------------------------ plumbing
     def _engine_dir(self, i: int) -> str:
@@ -55,18 +68,27 @@ class Cluster:
                   is_leader=(lambda i=i: i == self.leader_hint),
                   **self.engine_kwargs)
         self.engines[i] = eng
-        # deterministic first leader: the hinted node times out first
         eto = self.election_timeout
-        if i == self.leader_hint:
-            eto = (eto[0] // 2, eto[0] // 2 + 2)
         node = RaftNode(
             i, list(range(self.n)), self.net, eng, eng.apply,
             apply_batch_fn=getattr(eng, "apply_batch", None),
             seed=self.seed, election_timeout=eto,
             heartbeat_every=self.heartbeat_every,
             max_batch=self.max_batch,
+            lease_ticks=self.lease_ticks,
             snapshot_fn=eng.snapshot,
             install_snapshot_fn=getattr(eng, "install_snapshot", None))
+        node.metrics = self.metrics[i]   # read-tier evidence (quorum rounds)
+        # deterministic first leader: the hinted node's FIRST deadline
+        # fires early; every later reset uses the full election timeout.
+        # (Permanently halving its timeout — the old scheme — would let a
+        # node stand for election inside another leader's lease window,
+        # which must stay < the minimum election timeout to be safe.)
+        # Fresh construction only: a RESTARTED hint node must come back
+        # with the full timeout for exactly the same reason.
+        if fresh and i == self.leader_hint:
+            node.election_deadline = self.net.time + \
+                node.rng.randint(eto[0] // 2, eto[0] // 2 + 2)
         if isinstance(eng, NezhaEngine):
             eng.on_snapshot = node.compact_to
             if eng.run_shipping:
@@ -79,6 +101,14 @@ class Cluster:
                 eng.raft_role = (lambda node=node: node.role == LEADER)
         self.nodes[i] = node
         if not fresh:
+            # restart vote stickiness: before crashing, this node's probe
+            # acks may have renewed a lease that is STILL live, but its
+            # in-memory last-leader-contact is gone.  Treat startup as
+            # leader contact so it disregards RequestVote for one minimum
+            # election timeout (>= any lease it could have renewed) —
+            # otherwise a restarted follower could vote a rival leader in
+            # mid-lease and a LEASE read on the old leader would be stale.
+            node._last_leader_contact = self.net.time
             entries, offsets, si, st = eng.recover()
             node.entries = list(entries)
             node.offsets = list(offsets)
@@ -113,72 +143,47 @@ class Cluster:
         raise TimeoutError("no leader elected")
 
     # -------------------------------------------------------------- client
+    # Thin wrappers over the consistency-tiered client: the leadership-
+    # change retry loop, ReadIndex round, lease check and session routing
+    # all live in repro.core.client — not here, and not in each test.
     def put(self, key: bytes, value: bytes, max_ticks: int = 2000) -> int:
-        ld = self.elect()
-        idx = ld.client_put(key, value)
-        assert idx is not None
-        for _ in range(max_ticks):
-            if ld.last_applied >= idx:
-                for e in self.engines:
-                    if e is not None:
-                        e.post_op()
-                return idx
-            self.tick()
-            if ld.role != LEADER:       # leadership changed mid-flight
-                return self.put(key, value, max_ticks)
-        raise TimeoutError("put not committed")
+        return self.client.put(key, value, max_ticks=max_ticks)
 
     def put_many(self, items, window: int = 64, max_ticks: int = 200000,
                  batch: Optional[int] = None):
-        """Pipelined group-committed puts: submit in `batch`-sized windows
-        (client_put_many => one buffered write + one fsync per window) and
-        keep up to `window` entries in flight."""
-        ld = self.elect()
-        if batch is None:
-            batch = max(1, min(window, ld.max_batch))
-        it = iter(items)
-        pending: List[int] = []
-        done = 0
-        exhausted = False
-        for _ in range(max_ticks):
-            while not exhausted and len(pending) < window:
-                chunk = []
-                room = min(batch, window - len(pending))
-                while len(chunk) < room:
-                    nxt = next(it, None)
-                    if nxt is None:
-                        exhausted = True
-                        break
-                    chunk.append(nxt)
-                if not chunk:
-                    break
-                idxs = ld.client_put_many(chunk)
-                if idxs is None:           # leadership moved: re-elect, retry
-                    ld = self.elect()
-                    idxs = ld.client_put_many(chunk)
-                pending.extend(idxs)
-            if pending:
-                self.tick()
-                applied = ld.last_applied
-                before = len(pending)
-                pending = [i for i in pending if i > applied]
-                done += before - len(pending)
-                for e in self.engines:
-                    if e is not None:
-                        e.post_op()
-            if exhausted and not pending:
-                return done
-        raise TimeoutError(f"put_many stalled: {done} done, "
-                           f"{len(pending)} pending")
+        return self.client.put_many(items, window=window,
+                                    max_ticks=max_ticks, batch=batch)
 
-    def get(self, key: bytes) -> Optional[bytes]:
-        return self.elect_engine().get(key)
+    def get(self, key: bytes, consistency: Optional[str] = None, *,
+            session: Optional[Session] = None,
+            node: Optional[int] = None) -> Optional[bytes]:
+        return self.client.get(key, consistency, session=session, node=node)
 
-    def scan(self, lo: bytes, hi: bytes):
-        return self.elect_engine().scan(lo, hi)
+    def scan(self, lo: bytes, hi: bytes, consistency: Optional[str] = None,
+             *, session: Optional[Session] = None,
+             node: Optional[int] = None):
+        return self.client.scan(lo, hi, consistency, session=session,
+                                node=node)
 
-    def elect_engine(self):
-        return self.engines[self.elect().nid]
+    def session(self) -> Session:
+        return self.client.session()
+
+    def read_report(self) -> List[dict]:
+        """Per-node consistency-tier evidence: reads served by tier, the
+        quorum rounds paid (LINEARIZABLE / lapsed-lease fallback), reads
+        followers served (SESSION's new read capacity) and session reads
+        that stalled on the apply pipeline.  Shared by benchmarks/
+        fig_reads.py, the smoke gate and the stale-read tests."""
+        ld = self.leader()
+        return [{
+            "node": i,
+            "role": "leader" if ld is not None and i == ld.nid
+                    else "follower",
+            "tiers": dict(m.read_tiers),
+            "quorum_rounds": m.read_quorum_rounds,
+            "follower_serves": m.follower_serves,
+            "session_stalls": m.session_stalls,
+        } for i, m in enumerate(self.metrics)]
 
     # ------------------------------------------------------- run shipping
     def drain_shipping(self, max_ticks: int = 4000) -> bool:

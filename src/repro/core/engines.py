@@ -22,12 +22,16 @@ Replication tiers — how bytes reach a follower, cheapest-first:
   1. Value shipping (always on): AppendEntries carries the log entries
      themselves; each follower persists them once into its own active
      segment.  This is the only tier that runs on the put critical path.
-  2. Run shipping (NezhaEngine, run_shipping=True): only the leader runs
-     GC flushes and leveled merges; every sealed run is streamed to
-     followers as a chunked, resumable run-adoption record (shipping.py)
-     and installed wholesale — follower gc_sorted/gc_level_merge rewrite
-     bytes stay at zero.  Fires whenever the leader seals a run, strictly
-     ordered behind the applied log.
+  2. Run shipping (NezhaEngine, DEFAULT — opt out with
+     run_shipping=False): only the leader runs GC flushes and leveled
+     merges; every sealed run is streamed to followers as a chunked,
+     resumable run-adoption record (shipping.py) and installed wholesale —
+     follower gc_sorted/gc_level_merge rewrite bytes stay at zero.  Fires
+     whenever the leader seals a run, strictly ordered behind the applied
+     log.  On by default since it soaked through the PR-4 chaos suite;
+     the opt-out exists for A/B baselines (fig_runship's 'local' mode)
+     and for standalone-engine tests that exercise local GC on every
+     node.
   3. Snapshot shipping (always available): InstallSnapshot ships the whole
      run set.  Fires when a follower is behind the leader's log-compaction
      point (classic Raft catch-up) or when a run-adoption fence trips (a
@@ -36,6 +40,16 @@ Replication tiers — how bytes reach a follower, cheapest-first:
 
   LSM-Raft's `_ShippedLSM` is the related-work variant of tier 2: shipped
   compacted SSTables instead of shipped value-log runs.
+
+Read tiers mirror the replication tiers (repro/core/client.py): the
+cluster's client API serves LINEARIZABLE reads via ReadIndex on the leader
+(one heartbeat-quorum round covers a batch of reads), LEASE reads locally
+on a leader holding a heartbeat-renewed lease (zero quorum rounds), and
+SESSION reads from ANY node gated by a last-seen-index session token.
+Run shipping is what makes the SESSION tier pay off: followers hold the
+leader's exact sealed-run sets, so follower scans are byte-equal with the
+leader and scan capacity scales with cluster size instead of serializing
+through one node (benchmarks/fig_reads.py).
 
 Batching / caching knobs (the group-commit I/O pipeline):
 
@@ -418,15 +432,19 @@ class NezhaEngine(EngineBase):
 
     def __init__(self, dirpath, metrics=None, *, gc_threshold: int = 32 << 20,
                  gc_batch: int = 64, level_fanout: int = 4,
-                 on_snapshot=None, run_shipping: bool = False, **kw):
+                 on_snapshot=None, run_shipping: bool = True, **kw):
         super().__init__(dirpath, metrics, **kw)
         self.gc_threshold = gc_threshold
         self.gc_batch = gc_batch
         self.level_fanout = level_fanout
         self.on_snapshot = on_snapshot  # callback(last_index, last_term)
-        # run shipping (replication tier 2): GC is leader-gated; sealed
-        # runs flow to ship_hook (the RunShipper) and followers install
-        # them via adopt_run instead of compacting locally
+        # run shipping (replication tier 2, ON by default): GC is
+        # leader-gated; sealed runs flow to ship_hook (the RunShipper) and
+        # followers install them via adopt_run instead of compacting
+        # locally.  run_shipping=False is the explicit opt-out for local-GC
+        # baselines.  Standalone engines (no cluster wiring) are unaffected:
+        # is_leader defaults to True, so GC still runs and ship_hook stays
+        # unset.
         self.run_shipping = run_shipping
         self.ship_hook = None   # callback(record dict, run bytes)
         self.raft_role = None   # callable() -> is this node the leader NOW

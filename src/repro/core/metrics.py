@@ -32,6 +32,18 @@ class Metrics:
     # tags so total replication bytes per node is one sum.
     ship_bytes: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     ship_ops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    # consistency-tiered read evidence (client.py): reads served by THIS
+    # node, by tier ('linearizable' | 'lease' | 'session'), plus the costs
+    # each tier pays — ReadIndex heartbeat-quorum rounds (linearizable /
+    # expired-lease fallback), reads a follower served (session: followers
+    # become read capacity), and reads that had to stall for the apply
+    # pipeline to reach the session token.  One evidence path shared by
+    # benchmarks/fig_reads.py, the smoke gate and the stale-read tests
+    # (Cluster.read_report()).
+    read_tiers: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    read_quorum_rounds: int = 0
+    follower_serves: int = 0
+    session_stalls: int = 0
     latencies_us: Dict[str, List[float]] = field(
         default_factory=lambda: defaultdict(list))
     # leveled-GC evidence: one record per completed GC unit of work —
@@ -57,6 +69,23 @@ class Metrics:
     def on_bloom_skip(self):
         """A point get skipped an SSTable entirely via its bloom filter."""
         self.bloom_skips += 1
+
+    def on_read_tier(self, tier: str, *, follower: bool = False,
+                     stalled: bool = False):
+        """One client read served by this node at `tier` ('linearizable',
+        'lease' or 'session').  `follower` marks a read a non-leader served
+        (scalable read capacity); `stalled` marks a session read that had
+        to wait for the apply pipeline to reach its token."""
+        self.read_tiers[tier] += 1
+        if follower:
+            self.follower_serves += 1
+        if stalled:
+            self.session_stalls += 1
+
+    def on_read_quorum_round(self):
+        """One ReadIndex heartbeat-quorum round (covers every read queued
+        on the leader at that moment — the batching is the point)."""
+        self.read_quorum_rounds += 1
 
     def on_ship(self, kind: str, nbytes: int):
         """One replication payload crossing the network ('snapshot', 'sst'
@@ -118,6 +147,10 @@ class Metrics:
             "cache_hits": dict(self.cache_hits),
             "bloom_skips": self.bloom_skips,
             "ship_bytes": dict(self.ship_bytes),
+            "read_tiers": dict(self.read_tiers),
+            "read_quorum_rounds": self.read_quorum_rounds,
+            "follower_serves": self.follower_serves,
+            "session_stalls": self.session_stalls,
             "latency": lat,
         }
 

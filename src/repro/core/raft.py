@@ -10,6 +10,25 @@ offset (paper Algorithm 1).
 
 Safety-property surface tested by tests/test_raft_properties.py:
   Election Safety, Log Matching, Leader Completeness, State Machine Safety.
+
+Read path (client.py's consistency tiers ride on these primitives):
+
+  * ReadIndex (§6.4): `read_index_submit()` records the commit index and
+    queues a ReadHandle; the next tick starts ONE heartbeat-quorum round
+    (a `probe` sequence number piggybacked on AppendEntries and echoed in
+    the reply) that confirms leadership for EVERY read queued at that
+    moment.  A handle turns `ready` once confirmed and applied >= its
+    read index; losing leadership turns it `aborted` instead — a deposed
+    leader can never serve a possibly-stale linearizable read.
+  * Leader lease: every probe ack also carries evidence the follower
+    still accepted us as leader at the probe's SEND time; when a majority
+    (incl. self) acked probes sent at time t, the lease extends to
+    t + lease_ticks.  `lease_valid()` then authorizes local reads with no
+    quorum round.  Soundness rests on two legs: lease_ticks <
+    min(election_timeout), and leader stickiness — a node disregards
+    RequestVote within min(election_timeout) of valid leader traffic
+    (§9.6), so the followers renewing a lease can never simultaneously
+    form the majority that elects the leader's replacement.
 """
 from __future__ import annotations
 
@@ -21,6 +40,8 @@ from repro.core.simnet import SimNet
 from repro.core.valuelog import KIND_NOOP, KIND_PUT, LogEntry
 
 FOLLOWER, CANDIDATE, LEADER = "follower", "candidate", "leader"
+
+_NEVER = -(10 ** 9)
 
 
 # ------------------------------------------------------------------ messages
@@ -46,6 +67,12 @@ class AppendEntries:
     prev_log_term: int
     entries: List[LogEntry]
     leader_commit: int
+    # ReadIndex/lease piggyback: the leader's heartbeat-quorum round id.
+    # A follower echoes it in its reply; any reply (success or not) in the
+    # leader's term proves the follower still accepted its leadership when
+    # this round was SENT — which is exactly what ReadIndex confirmation
+    # and lease renewal need.  0 = no round attached (legacy traffic).
+    probe: int = 0
 
 
 @dataclass
@@ -53,6 +80,23 @@ class AppendEntriesReply:
     term: int
     success: bool
     match_index: int
+    probe: int = 0    # echo of AppendEntries.probe
+
+
+@dataclass
+class ReadHandle:
+    """One pending consistency-tiered read on the leader (client.py).
+
+    Lifecycle: submitted (probe=None) -> assigned to the next quorum round
+    (probe=round id) -> `confirmed` when a majority echoed that round ->
+    `ready` once last_applied >= read_index.  `aborted` is terminal: the
+    node lost leadership (or the client timed it out) before confirmation,
+    so serving would risk a stale read."""
+    read_index: int
+    probe: Optional[int] = None
+    confirmed: bool = False
+    ready: bool = False
+    aborted: bool = False
 
 
 @dataclass
@@ -130,6 +174,7 @@ class RaftNode:
                  heartbeat_every: int = 5,
                  max_entries_per_rpc: int = 64,
                  max_batch: Optional[int] = None,
+                 lease_ticks: Optional[int] = None,
                  snapshot_fn: Optional[Callable[[], Optional[Tuple[int, int, Any]]]] = None,
                  install_snapshot_fn: Optional[Callable[[int, int, Any], None]] = None):
         self.nid = nid
@@ -148,6 +193,19 @@ class RaftNode:
         # max_entries_per_rpc is its default when unset
         self.max_batch = max_batch if max_batch is not None \
             else max_entries_per_rpc
+        # leader lease duration; must stay under min(election_timeout) —
+        # vote stickiness only shields that long, so a bigger lease would
+        # let a rival leader be elected while the old lease reads valid
+        self.lease_ticks = lease_ticks if lease_ticks is not None \
+            else max(1, election_timeout[0] - heartbeat_every)
+        if self.lease_ticks >= election_timeout[0]:
+            # correctness invariant, not a debug check (asserts vanish
+            # under python -O): an oversized lease outlives the vote-
+            # stickiness window and re-opens the stale-lease-read hole
+            raise ValueError(
+                f"lease_ticks={self.lease_ticks} must stay under the "
+                f"minimum election timeout {election_timeout[0]} "
+                "(lease safety)")
 
         self.current_term = 0
         self.voted_for: Optional[int] = None
@@ -169,6 +227,24 @@ class RaftNode:
         # chunks, the follower's RunAdopter assembles + installs them
         self.shipper = None
         self.adopter = None
+        # ReadIndex / lease state (leader-only; see module docstring).
+        # _probe_sent maps round id -> send time; _probe_acked / _ack_basis
+        # track, per peer, the newest round echoed and the send time of
+        # that round (the lease basis).  metrics is wired by the cluster
+        # so quorum rounds triggered by reads are byte-counter evidence.
+        self.pending_reads: List[ReadHandle] = []
+        self.lease_until = _NEVER
+        self.metrics = None
+        # last time valid leader traffic arrived (AppendEntries /
+        # InstallSnapshot / ShipRun in a current term) — the basis for
+        # leader stickiness in _on_request_vote, which is what makes the
+        # lease sound: no majority can form inside a live leader's lease
+        self._last_leader_contact = _NEVER
+        self._probe_seq = 0
+        self._probe_sent: Dict[int, int] = {}
+        self._probe_acked: Dict[int, int] = {}
+        self._ack_basis: Dict[int, int] = {}
+        self._term_start_index = 0
         self._reset_election_deadline()
         self._next_heartbeat = 0
         # metrics for tests
@@ -214,12 +290,94 @@ class RaftNode:
         self.role = FOLLOWER
         self.voted_for = None
         self.votes = set()
+        self._abort_reads()   # a deposed leader must refuse pending reads
         self._persist_meta()
         # NOTE: no election-deadline reset here.  The timer resets only on
         # granting a vote or on valid leader traffic (AppendEntries /
         # InstallSnapshot / ShipRun); a bare term bump must not — otherwise
         # a disruptive candidate with a stale log and a short timeout can
         # reset everyone forever and no electable node ever stands.
+
+    # ------------------------------------------------------- read tiers
+    def _abort_reads(self):
+        """Leadership is gone (or never confirmed): every queued read is
+        refused rather than risk serving stale state, and the lease dies."""
+        for h in self.pending_reads:
+            h.aborted = True
+        self.pending_reads = []
+        self.lease_until = _NEVER
+        self._probe_acked = {}
+        self._ack_basis = {}
+
+    def read_index_submit(self) -> Optional[ReadHandle]:
+        """LINEARIZABLE tier: queue a ReadIndex read.  The read index is
+        the current commit index, floored at this term's no-op barrier —
+        before the barrier commits the leader cannot know its commit index
+        is up to date (Raft §8 / §6.4).  One heartbeat-quorum round on the
+        next tick confirms leadership for the whole queue."""
+        if self.role != LEADER:
+            return None
+        return_index = max(self.commit_index, self._term_start_index)
+        h = ReadHandle(read_index=return_index)
+        self.pending_reads.append(h)
+        return h
+
+    def lease_valid(self) -> bool:
+        """LEASE tier: may this node serve a local read with no quorum
+        round right now?  Requires leadership, the term barrier committed
+        (same reason as ReadIndex), and — with peers — a lease renewed by
+        a recent heartbeat-quorum ack basis."""
+        if self.role != LEADER or self.commit_index < self._term_start_index:
+            return False
+        return not self.peers or self.net.time < self.lease_until
+
+    def _refresh_lease(self):
+        """Lease = (send time of the newest probe a MAJORITY has acked,
+        self included) + lease_ticks.  Sort peer ack bases descending and
+        take the quorum-th: every node in that set accepted our leadership
+        no earlier than that instant."""
+        if not self.peers:
+            return
+        bases = sorted((self._ack_basis.get(p, _NEVER) for p in self.peers),
+                       reverse=True)
+        need = (len(self.peers) + 1) // 2   # peers needed beyond self
+        basis = bases[need - 1]
+        if basis > _NEVER:
+            self.lease_until = max(self.lease_until,
+                                   basis + self.lease_ticks)
+
+    def _dispatch_read_round(self):
+        """Assign every not-yet-assigned pending read to ONE fresh
+        heartbeat round — the batching that makes ReadIndex cheap: a
+        queue of N reads costs one quorum round, not N."""
+        if not any(h.probe is None for h in self.pending_reads):
+            return False
+        self._broadcast_append()
+        for h in self.pending_reads:
+            if h.probe is None:
+                h.probe = self._probe_seq
+        if self.metrics is not None:
+            self.metrics.on_read_quorum_round()
+        self._check_read_quorum()   # single-node: quorum of 1, instantly
+        return True
+
+    def _check_read_quorum(self):
+        for h in self.pending_reads:
+            if h.probe is not None and not h.confirmed:
+                acks = 1 + sum(1 for p in self.peers
+                               if self._probe_acked.get(p, 0) >= h.probe)
+                if acks * 2 > len(self.peers) + 1:
+                    h.confirmed = True
+        self._serve_ready_reads()
+
+    def _serve_ready_reads(self):
+        keep = []
+        for h in self.pending_reads:
+            if h.confirmed and self.last_applied >= h.read_index:
+                h.ready = True
+            elif not h.aborted:
+                keep.append(h)
+        self.pending_reads = keep
 
     # ------------------------------------------------------------ client
     def client_put(self, key: bytes, value: bytes) -> Optional[int]:
@@ -270,7 +428,12 @@ class RaftNode:
             self._handle(src, msg)
         now = self.net.time
         if self.role == LEADER:
-            if now >= self._next_heartbeat:
+            # a queued ReadIndex batch rides its own round immediately
+            # (read latency should not wait for the heartbeat timer); the
+            # round doubles as the heartbeat
+            if self._dispatch_read_round():
+                self._next_heartbeat = now + self.heartbeat_every
+            elif now >= self._next_heartbeat:
                 self._broadcast_append()
                 self._next_heartbeat = now + self.heartbeat_every
             if self.shipper is not None:
@@ -278,6 +441,8 @@ class RaftNode:
         elif now >= self.election_deadline:
             self._start_election()
         self._apply_committed()
+        if self.role == LEADER:
+            self._serve_ready_reads()
         if self.adopter is not None and self.role != LEADER:
             self.adopter.tick()   # install pending records once applied
 
@@ -286,6 +451,7 @@ class RaftNode:
         self.role = CANDIDATE
         self.current_term += 1
         self.voted_for = self.nid
+        self._abort_reads()
         self._persist_meta()
         self.votes = {self.nid}
         self._reset_election_deadline()
@@ -303,9 +469,15 @@ class RaftNode:
         self.next_index = {p: self.last_log_index + 1 for p in self.peers}
         self.match_index = {p: 0 for p in self.peers}
         self.match_index[self.nid] = self.last_log_index
-        # no-op barrier entry to commit previous-term entries (Raft §8)
+        # fresh term: no lease, no probe acks carry over
+        self.lease_until = _NEVER
+        self._probe_acked = {}
+        self._ack_basis = {}
+        # no-op barrier entry to commit previous-term entries (Raft §8);
+        # its index is also the floor for every ReadIndex in this term
         entry = LogEntry(self.current_term, self.last_log_index + 1,
                          KIND_NOOP, b"", b"")
+        self._term_start_index = entry.index
         off = self.store.append(entry)
         self.store.commit_window()
         self.entries.append(entry)
@@ -318,6 +490,14 @@ class RaftNode:
 
     # --------------------------------------------------------- replication
     def _broadcast_append(self):
+        """One full round = one probe: each broadcast opens a fresh probe
+        id whose echoes confirm leadership (ReadIndex) and renew the lease
+        from the round's send time."""
+        self._probe_seq += 1
+        self._probe_sent[self._probe_seq] = self.net.time
+        if len(self._probe_sent) > 128:   # bounded: old rounds are dead
+            for k in sorted(self._probe_sent)[:-64]:
+                del self._probe_sent[k]
         for p in self.peers:
             self._send_append(p)
 
@@ -353,7 +533,7 @@ class RaftNode:
         size = sum(len(e.key) + len(e.value) + 19 for e in ents)
         self.net.send(self.nid, peer, AppendEntries(
             self.current_term, self.nid, prev, self.term_at(prev), ents,
-            self.commit_index), size=size)
+            self.commit_index, probe=self._probe_seq), size=size)
 
     def _handle(self, src: int, msg):
         if isinstance(msg, RequestVote):
@@ -375,7 +555,22 @@ class RaftNode:
             if self.shipper is not None:
                 self.shipper.on_reply(src, msg)
 
+    def _note_leader_contact(self):
+        """Valid leader traffic: reset the election timer AND remember the
+        contact time for vote stickiness."""
+        self._last_leader_contact = self.net.time
+        self._reset_election_deadline()
+
     def _on_request_vote(self, src: int, m: RequestVote):
+        if self.net.time - self._last_leader_contact < self.eto[0]:
+            # Leader stickiness (Raft §9.6 / thesis §4.2.3): we heard from
+            # a live leader within the minimum election timeout, so we
+            # disregard the request ENTIRELY — no term adoption, no vote.
+            # Without this, a follower whose probe acks are renewing the
+            # leader's lease could simultaneously vote a new leader in,
+            # and a LEASE read on the old leader would serve stale data
+            # inside its supposedly-safe window.
+            return
         if m.term > self.current_term:
             self._become_follower(m.term)
         granted = False
@@ -409,14 +604,20 @@ class RaftNode:
             self.net.send(self.nid, src, AppendEntriesReply(
                 self.current_term, False, 0))
             return
+        if self.role == LEADER:
+            # a second leader in our own term is impossible; reaching here
+            # means m.term == current_term while we lead — never true, but
+            # stepping down must abort reads if it ever becomes reachable
+            self._abort_reads()
         self.role = FOLLOWER
         self.leader_id = m.leader
-        self._reset_election_deadline()
-        # log consistency check
+        self._note_leader_contact()
+        # log consistency check — still echoes the probe: even a failed
+        # consistency check acknowledges the sender's leadership
         if m.prev_log_index > self.last_log_index or \
                 self.term_at(m.prev_log_index) != m.prev_log_term:
             self.net.send(self.nid, src, AppendEntriesReply(
-                self.current_term, False, self.snap_index))
+                self.current_term, False, self.snap_index, probe=m.probe))
             return
         # skip the prefix we already hold (snapshot-covered or term-matching)
         start = 0
@@ -446,7 +647,7 @@ class RaftNode:
         if m.leader_commit > self.commit_index:
             self.commit_index = min(m.leader_commit, self.last_log_index)
         self.net.send(self.nid, src, AppendEntriesReply(
-            self.current_term, True, idx))
+            self.current_term, True, idx, probe=m.probe))
         self._apply_committed()
 
     def _on_append_reply(self, src: int, m: AppendEntriesReply):
@@ -455,6 +656,16 @@ class RaftNode:
             return
         if self.role != LEADER or m.term != self.current_term:
             return
+        # probe echo: leadership acknowledged as of the round's send time
+        # (success or not), driving ReadIndex confirmation + lease renewal
+        if m.probe and m.probe > self._probe_acked.get(src, 0):
+            self._probe_acked[src] = m.probe
+            basis = self._probe_sent.get(m.probe)
+            if basis is not None and \
+                    basis > self._ack_basis.get(src, _NEVER):
+                self._ack_basis[src] = basis
+                self._refresh_lease()
+            self._check_read_quorum()
         if m.success:
             self.match_index[src] = max(self.match_index.get(src, 0),
                                         m.match_index)
@@ -527,7 +738,7 @@ class RaftNode:
             return
         self.role = FOLLOWER
         self.leader_id = m.leader
-        self._reset_election_deadline()
+        self._note_leader_contact()
         if m.last_index <= self.snap_index:
             # already at (or past) this state: ack it anyway so the leader
             # advances, and clear any adoption stuck waiting for a resync

@@ -230,7 +230,7 @@ class RunAdopter:
             self._reply(src, tuple(m.rec["pos"]), 0)
             return
         node.leader_id = m.leader
-        node._reset_election_deadline()   # ship traffic IS leader liveness
+        node._note_leader_contact()       # ship traffic IS leader liveness
         rec = m.rec
         pos = tuple(rec["pos"])
         if self.awaiting_resync:

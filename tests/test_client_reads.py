@@ -1,0 +1,346 @@
+"""Consistency-tiered client API (repro.core.client): the stale-read
+regression the old direct-engine read path permitted, plus the guarantees
+each tier claims — ReadIndex safety + batching, lease zero-round reads and
+expiry, session read-your-writes / monotonic reads on followers.
+
+The headline test proves WHY the API redesign exists: a deposed leader on
+the minority side of a partition keeps role=LEADER (nothing ever tells it
+otherwise) and its engine happily serves state the majority has already
+overwritten.  The old `Cluster.get` read exactly that engine; the tiers
+refuse or redirect instead.
+"""
+import tempfile
+
+import pytest
+
+from repro.core.client import (LEASE, LINEARIZABLE, SESSION, NezhaClient,
+                               StaleReadError)
+from repro.core.cluster import Cluster
+from repro.core.raft import LEADER
+
+HI = b"\xff" * 11
+
+
+def make_cluster(n=3, seed=4, **engine_kw):
+    wd = tempfile.mkdtemp(prefix="clientreads_")
+    kw = {"gc_threshold": 1 << 60}
+    kw.update(engine_kw)
+    return Cluster(n=n, engine="nezha", workdir=wd, seed=seed,
+                   engine_kwargs=kw)
+
+
+def partition_leader_to_minority(c: Cluster, ld):
+    for i in range(c.n):
+        if i != ld.nid:
+            c.net.partition(ld.nid, i)
+
+
+def elect_new_majority_leader(c: Cluster, old):
+    for _ in range(4000):
+        c.tick()
+        nl = c.leader()
+        if nl is not None and nl.nid != old.nid and \
+                nl.commit_index >= nl.snap_index:
+            return nl
+    raise TimeoutError("no majority leader emerged")
+
+
+# ---------------------------------------------------------------- headline
+def test_deposed_leader_stale_read_hole_closed_by_tiers():
+    """Partition a leader into the minority, commit a newer value on the
+    majority: the OLD direct-engine read still returns the stale value
+    (the hole), while every tier pinned to the deposed leader refuses and
+    unpinned reads redirect to fresh state."""
+    c = make_cluster()
+    ses = c.session()
+    ses.put(b"k", b"old")
+    ld = c.elect()
+    partition_leader_to_minority(c, ld)
+    elect_new_majority_leader(c, ld)
+    ses.put(b"k", b"new")           # commits on the majority side
+
+    # the deposed leader still believes it leads, and its engine is stale:
+    # this is precisely the read the old Cluster.get used to serve
+    assert ld.role == LEADER
+    assert c.engines[ld.nid].get(b"k") == b"old"
+
+    # LINEARIZABLE pinned: ReadIndex can't confirm leadership -> refused
+    with pytest.raises(StaleReadError):
+        c.get(b"k", LINEARIZABLE, node=ld.nid)
+    # LEASE pinned: the lease lapsed long ago -> falls back to ReadIndex
+    # on the same node -> refused
+    assert not ld.lease_valid()
+    with pytest.raises(StaleReadError):
+        c.get(b"k", LEASE, node=ld.nid)
+    # SESSION pinned: applied state lags the session token -> refused
+    with pytest.raises(StaleReadError):
+        c.get(b"k", SESSION, session=ses, node=ld.nid)
+
+    # unpinned reads redirect to the majority and see the new value
+    assert c.get(b"k") == b"new"
+    assert c.get(b"k", LEASE) == b"new"
+    assert ses.get(b"k") == b"new"
+    c.destroy()
+
+
+# ------------------------------------------------------------ linearizable
+def test_linearizable_batch_costs_one_quorum_round():
+    """N queued reads ride ONE heartbeat-quorum round (the ReadIndex
+    batching the ISSUE asks for), vs one round per read when serial."""
+    c = make_cluster()
+    items = [(f"b{i:03d}".encode(), bytes([i]) * 32) for i in range(16)]
+    c.put_many(items)
+
+    rounds = lambda: sum(m.read_quorum_rounds for m in c.metrics)
+    r0 = rounds()
+    out = c.client.get_many([k for k, _ in items])
+    assert out == [v for _, v in items]
+    assert rounds() - r0 == 1
+
+    r0 = rounds()
+    for k, v in items[:8]:
+        assert c.get(k) == v          # serial: one round each
+    assert rounds() - r0 == 8
+    c.destroy()
+
+
+def test_linearizable_waits_for_apply_up_to_read_index():
+    """A read submitted right after a write must observe it (the handle
+    serves only once last_applied >= the recorded commit index)."""
+    c = make_cluster()
+    for i in range(5):
+        c.put(f"w{i}".encode(), bytes([i]))
+        assert c.get(f"w{i}".encode()) == bytes([i])
+    c.destroy()
+
+
+def test_single_node_cluster_all_tiers():
+    c = make_cluster(n=1, seed=3)
+    ses = c.session()
+    ses.put(b"solo", b"1")
+    assert c.get(b"solo") == b"1"
+    assert c.get(b"solo", LEASE) == b"1"
+    assert ses.get(b"solo") == b"1"
+    c.destroy()
+
+
+# ------------------------------------------------------------------- lease
+def test_lease_reads_pay_zero_quorum_rounds_under_stable_leader():
+    c = make_cluster()
+    items = [(f"l{i:03d}".encode(), bytes([i]) * 16) for i in range(12)]
+    c.put_many(items)
+    ld = c.elect()
+    assert ld.lease_valid()           # renewed by the put traffic
+    rounds = lambda: sum(m.read_quorum_rounds for m in c.metrics)
+    r0 = rounds()
+    for k, v in items:
+        assert c.get(k, LEASE) == v
+    assert rounds() - r0 == 0
+    assert c.metrics[ld.nid].read_tiers["lease"] >= len(items)
+    c.destroy()
+
+
+def test_lease_expires_without_heartbeat_acks():
+    """Isolate the leader and let lease_ticks elapse: lease_valid() must
+    flip false — the window in which a partitioned leader could lie is
+    bounded below the minimum election timeout by construction."""
+    c = make_cluster()
+    c.put(b"k", b"v")
+    ld = c.elect()
+    assert ld.lease_valid()
+    partition_leader_to_minority(c, ld)
+    for _ in range(ld.lease_ticks + c.net.max_delay + 1):
+        c.tick()
+    assert ld.role == LEADER          # nobody told it otherwise...
+    assert not ld.lease_valid()       # ...but it can no longer serve
+    assert ld.lease_ticks < c.election_timeout[0]
+    c.destroy()
+
+
+def test_lease_quorum_follower_cannot_elect_rival_leader():
+    """Leader stickiness (Raft §9.6) is the second leg of lease safety:
+    partition the leader from ONE follower only.  The shared follower —
+    whose probe acks keep renewing the lease — must disregard the
+    partitioned node's vote requests while the leader is live, so no
+    rival leader can form inside the lease window and a pinned LEASE
+    read stays current (this exact config produced a stale read before
+    the stickiness check existed)."""
+    wd = tempfile.mkdtemp(prefix="sticky_")
+    c = Cluster(n=3, engine="nezha", workdir=wd, seed=1,
+                heartbeat_every=12, election_timeout=(40, 80),
+                engine_kwargs={"gc_threshold": 1 << 60})
+    c.put(b"k", b"v1")
+    ld = c.elect()
+    b = [i for i in range(3) if i != ld.nid][0]
+    c.net.partition(ld.nid, b)
+    for _ in range(1200):
+        c.tick()
+        nl = c.leader()
+        assert nl is None or nl.nid == ld.nid, \
+            "rival leader elected while the old lease could still be valid"
+    assert c.get(b"k", LEASE, node=ld.nid) == b"v1"   # current, not stale
+    c.net.heal()
+    c.put(b"k", b"v2")                # liveness intact after the heal
+    assert c.get(b"k", LEASE) == b"v2"
+    c.destroy()
+
+
+def test_restarted_hint_node_keeps_full_election_timeout():
+    """The deterministic-first-leader nudge is construction-only: a
+    RESTARTED leader_hint node must come back with the full election
+    timeout, or it could stand for election inside the current leader's
+    lease window."""
+    c = make_cluster()
+    hint = c.leader_hint
+    ld = c.elect()
+    assert ld.nid == hint             # the nudge did its one job
+    c.crash(hint)
+    c.elect()                         # another node takes over
+    c.restart(hint)
+    nd = c.nodes[hint]
+    assert nd.election_deadline - c.net.time >= c.election_timeout[0], \
+        "restart re-applied the halved first-election deadline"
+    # and the restarted node is vote-sticky: before crashing it may have
+    # renewed a lease that is still live, so it must disregard vote
+    # requests for one minimum election timeout after coming back
+    assert c.net.time - nd._last_leader_contact < c.election_timeout[0]
+    c.destroy()
+
+
+def test_oversized_lease_ticks_rejected_at_construction():
+    """lease_ticks >= min election timeout would outlive the vote-
+    stickiness window (the stale-lease hole): refused up front."""
+    wd = tempfile.mkdtemp(prefix="badlease_")
+    with pytest.raises(ValueError):
+        Cluster(n=3, engine="nezha", workdir=wd, seed=0, lease_ticks=100,
+                engine_kwargs={"gc_threshold": 1 << 60})
+
+
+# ----------------------------------------------------------------- session
+def test_session_read_your_writes_on_every_follower():
+    c = make_cluster()
+    ses = c.session()
+    ses.put(b"ryw", b"mine")
+    ld = c.elect()
+    for f in range(c.n):
+        if f != ld.nid:
+            assert c.get(b"ryw", SESSION, session=ses, node=f) == b"mine"
+    rep = c.read_report()
+    assert sum(r["follower_serves"] for r in rep) == c.n - 1
+    assert sum(r["tiers"].get("session", 0) for r in rep) == c.n - 1
+    c.destroy()
+
+
+def test_session_monotonic_read_stalls_on_lagging_follower():
+    """A follower behind the session token must wait for its apply
+    pipeline (counted as a session stall) instead of serving older
+    state — monotonic reads."""
+    c = make_cluster()
+    ld = c.elect()
+    lag = [i for i in range(3) if i != ld.nid][0]
+    other = [i for i in range(3) if i not in (ld.nid, lag)][0]
+    c.net.partition(ld.nid, lag)
+    c.net.partition(other, lag)
+    ses = c.session()
+    ses.put(b"m", b"2")               # commits on the majority, lag is out
+    assert c.nodes[lag].last_applied < ses.last_index
+    c.net.heal()
+    assert c.get(b"m", SESSION, session=ses, node=lag) == b"2"
+    assert c.metrics[lag].session_stalls >= 1
+    c.destroy()
+
+
+def test_session_unpinned_redirects_around_lagging_node():
+    """Unpinned session reads route around a node that cannot satisfy the
+    token within the stall budget (partitioned forever here)."""
+    c = make_cluster()
+    ld = c.elect()
+    lag = [i for i in range(3) if i != ld.nid][0]
+    other = [i for i in range(3) if i not in (ld.nid, lag)][0]
+    c.net.partition(ld.nid, lag)
+    c.net.partition(other, lag)
+    ses = c.session()
+    ses.put(b"r", b"3")
+    c.client.stall_ticks = 20         # don't burn the budget on the lagger
+    for _ in range(4):                # round-robin passes over `lag` too
+        assert ses.get(b"r") == b"3"
+    c.destroy()
+
+
+def test_session_scans_byte_equal_across_gc_and_shipping():
+    """With run shipping (the default) followers adopt the leader's sealed
+    runs, so a session scan served by a follower is byte-equal with the
+    leader even after GC cycles rewrote the store."""
+    c = make_cluster(gc_threshold=24 << 10, level_fanout=2)
+    items = [(f"user{i:06d}".encode(), bytes([i % 256]) * 512)
+             for i in range(200)]
+    ses = c.session()
+    ses.put_many(items)
+    ld = c.elect()
+    c.engines[ld.nid].run_gc_to_completion()
+    assert c.engines[ld.nid].gc_count >= 1
+    assert c.drain_shipping()
+    lscan = c.engines[ld.nid].scan(b"", HI)
+    assert lscan == sorted(items)
+    for f in range(c.n):
+        if f != ld.nid:
+            assert c.scan(b"", HI, SESSION, session=ses, node=f) == lscan
+            # and the follower really did zero GC rewrite work
+            assert c.metrics[f].write_bytes.get("gc_sorted", 0) == 0
+    c.destroy()
+
+
+# ------------------------------------------------------------------ writes
+def test_put_many_resubmits_after_leadership_change():
+    """put_many must not count writes submitted to a deposed leader as
+    committed: its indexes may name different entries in the new leader's
+    log.  Partition the leader mid-stream: every unconfirmed chunk is
+    resubmitted to the majority leader, the call returns the full count,
+    and every item is durably readable — with the session token tracking
+    the indexes actually applied (read-your-writes on followers)."""
+    c = make_cluster()
+    c.put(b"seed", b"s")
+    ld = c.elect()
+    partition_leader_to_minority(c, ld)
+    ses = c.session()
+    items = [(f"pm{i:03d}".encode(), bytes([i]) * 32) for i in range(24)]
+    # submission starts on the old leader (still the only one known) and
+    # must migrate to the majority leader elected mid-drain
+    assert ses.put_many(items, window=8, batch=4) == 24
+    nl = c.leader()
+    assert nl is not None and nl.nid != ld.nid
+    for k, v in items:
+        assert c.get(k) == v          # linearizable: all 24 committed
+    fol = [i for i in range(3) if i not in (ld.nid, nl.nid)][0]
+    assert c.get(items[-1][0], SESSION, session=ses, node=fol) == \
+        items[-1][1]
+    c.destroy()
+
+
+
+def test_put_survives_deposed_leader_via_loop_retry():
+    """client.put retries through leadership changes with a LOOP (the old
+    Cluster.put recursed): a put targeted at a leader that gets deposed
+    mid-flight must still commit via the new majority leader."""
+    c = make_cluster()
+    c.put(b"x", b"1")
+    ld = c.elect()
+    partition_leader_to_minority(c, ld)
+    # the client first submits to the stale leader (it is still the only
+    # known one), then detects the higher-term leader and retries
+    assert c.put(b"x", b"2") > 0
+    assert c.get(b"x") == b"2"
+    import inspect
+    src = inspect.getsource(NezhaClient.put)
+    assert "self.put(" not in src     # the retry really is a loop now
+    c.destroy()
+
+
+def test_default_read_is_linearizable_and_default_shipping_on():
+    c = make_cluster()
+    assert c.client.default_consistency == LINEARIZABLE
+    for e in c.engines:
+        assert e.run_shipping          # ROADMAP soak item: default on
+    ld = c.elect()
+    assert ld.shipper is not None      # cluster wired the shipper
+    c.destroy()
