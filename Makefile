@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test smoke bench bench-full
+.PHONY: test smoke chaos bench bench-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -8,6 +8,10 @@ test:
 # tiny all-engine benchmark gate (also: pytest -m smoke)
 smoke:
 	$(PY) -m benchmarks.run --smoke
+
+# fuller seeded chaos schedules (kill/isolate/lossy/gc_storm) + checker
+chaos:
+	$(PY) -m pytest -q -m chaos
 
 bench:
 	$(PY) -m benchmarks.run

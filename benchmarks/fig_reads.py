@@ -50,8 +50,18 @@ def _load(nn: int, n_keys: int, vsize: int, gc_threshold: int, seed: int):
     return c, items
 
 
-def _rounds(c: Cluster) -> int:
-    return sum(m.read_quorum_rounds for m in c.metrics)
+def _snap(c: Cluster) -> list:
+    """Per-node Metrics.snapshot() — counters are engine-lifetime
+    cumulative, so every measured section works on deltas."""
+    return [m.snapshot() for m in c.metrics]
+
+
+def _delta(c: Cluster, snaps) -> list:
+    return [m.delta(s) for m, s in zip(c.metrics, snaps)]
+
+
+def _rounds_since(c: Cluster, snaps) -> int:
+    return sum(d["read_quorum_rounds"] for d in _delta(c, snaps))
 
 
 def run(n_keys=None, vsize=None, n_gets=None, n_scans=None, sizes=(3, 5),
@@ -68,27 +78,27 @@ def run(n_keys=None, vsize=None, n_gets=None, n_scans=None, sizes=(3, 5),
     keys = [k for k, _ in items]
     sample = [keys[(i * 7919) % len(keys)] for i in range(n_gets)]
 
-    r0 = _rounds(c)
+    s0 = _snap(c)
     dt, _ = common.timed(lambda: [c.get(k) for k in sample])
-    rounds = _rounds(c) - r0
+    rounds = _rounds_since(c, s0)
     rows.append(("fig_reads/linearizable", 1e6 * dt / n_gets,
                  f"ops_s={n_gets / dt:.0f};quorum_rounds={rounds}"
                  f";rounds_per_read={rounds / n_gets:.2f}"))
 
-    r0 = _rounds(c)
+    s0 = _snap(c)
     batch = 16
     dt, _ = common.timed(lambda: [
         c.client.get_many(sample[i:i + batch])
         for i in range(0, n_gets, batch)])
-    rounds = _rounds(c) - r0
+    rounds = _rounds_since(c, s0)
     rows.append(("fig_reads/linearizable_batched", 1e6 * dt / n_gets,
                  f"ops_s={n_gets / dt:.0f};quorum_rounds={rounds}"
                  f";rounds_per_read={rounds / n_gets:.2f};batch={batch}"))
 
     c.get(sample[0], LEASE)        # may pay one round to (re)arm the lease
-    r0 = _rounds(c)
+    s0 = _snap(c)
     dt, _ = common.timed(lambda: [c.get(k, LEASE) for k in sample])
-    rounds = _rounds(c) - r0
+    rounds = _rounds_since(c, s0)
     rows.append(("fig_reads/lease", 1e6 * dt / n_gets,
                  f"ops_s={n_gets / dt:.0f};quorum_rounds={rounds}"
                  f";rounds_per_read={rounds / n_gets:.2f}"))
@@ -115,6 +125,8 @@ def run(n_keys=None, vsize=None, n_gets=None, n_scans=None, sizes=(3, 5),
         # spread: round-robin over every live node, ideal-parallel
         # throughput = K / max per-node busy time (see module docstring)
         busy = defaultdict(float)
+        s0 = _snap(c)      # isolate the spread loop from the equality
+                           # check + baseline scans above (all session-tier)
         order = list(range(nn))
         for j in range(n_scans):
             nid = order[j % nn]
@@ -122,14 +134,14 @@ def run(n_keys=None, vsize=None, n_gets=None, n_scans=None, sizes=(3, 5),
             c.scan(b"", HI, SESSION, session=ses, node=nid)
             busy[nid] += time.perf_counter() - t0
         agg = n_scans / max(busy.values())
-        rep = c.read_report()
-        fol_serves = sum(r["follower_serves"] for r in rep)
+        deltas = _delta(c, s0)
+        fol_serves = sum(d["follower_serves"] for d in deltas)
         rows.append((
             f"fig_reads/n{nn}/session_spread",
             1e6 * max(busy.values()) / n_scans,
             f"scans_s={agg:.0f};nodes={nn};scaling_x={agg / base:.2f}"
             f";scan_equal={int(equal)};follower_serves={fol_serves}"
-            f";session_stalls={sum(r['session_stalls'] for r in rep)}"))
+            f";session_stalls={sum(d['session_stalls'] for d in deltas)}"))
         common.destroy(c)
     return rows
 

@@ -30,6 +30,9 @@ def run(engines=None, n=None, vsize=None, gc_threshold=None, seed=11):
                     engine_kwargs={"gc_threshold": gc_threshold,
                                    "gc_batch": 128, "level_fanout": 2,
                                    "run_shipping": mode == "shipped"})
+        # counters are engine-lifetime cumulative: baseline right after
+        # construction so the derived numbers are THIS run's movement
+        base = [m.snapshot() for m in c.metrics]
         items = common.keys_values(n, vsize)
         dt, done = common.timed(c.put_many, items)
         ld = c.elect()
@@ -48,14 +51,17 @@ def run(engines=None, n=None, vsize=None, gc_threshold=None, seed=11):
         lscan = le.scan(b"", b"\xff" * 11)
         equal = all(c.engines[f].scan(b"", b"\xff" * 11) == lscan
                     for f in fids)
-        cluster_gc = sum(m.gc_total_bytes() for m in c.metrics)
-        fol_flush = sum(c.metrics[f].write_bytes.get("gc_sorted", 0)
+        deltas = [m.delta(s) for m, s in zip(c.metrics, base)]
+        gc_cats = ("gc_sorted", "gc_level_merge")
+        cluster_gc = sum(d["write_bytes"].get(cat, 0)
+                         for d in deltas for cat in gc_cats)
+        fol_flush = sum(deltas[f]["write_bytes"].get("gc_sorted", 0)
                         for f in fids)
-        fol_merge = sum(c.metrics[f].write_bytes.get("gc_level_merge", 0)
+        fol_merge = sum(deltas[f]["write_bytes"].get("gc_level_merge", 0)
                         for f in fids)
-        adopt = sum(c.metrics[f].write_bytes.get("run_adopt", 0)
+        adopt = sum(deltas[f]["write_bytes"].get("run_adopt", 0)
                     for f in fids)
-        ship = sum(m.total_ship_bytes() for m in c.metrics)
+        ship = sum(sum(d["ship_bytes"].values()) for d in deltas)
         user = max(le.user_bytes, 1)
         derived = (f"ops_s={done / dt:.0f}"
                    f";cluster_gc_bytes={cluster_gc}"

@@ -1,0 +1,175 @@
+"""Fig. TAIL — open-loop tail latency per consistency tier, through chaos.
+
+Every other figure is closed-loop mean ops/s; this one is the ROADMAP's
+"millions of users" lens: Poisson arrivals at a fixed offered rate,
+Zipfian key skew, YCSB mixes, latency read off HDR-style log-bucketed
+histograms (p50/p99/p999), with the queue-delay vs service-time split
+that closed-loop numbers structurally cannot see (coordinated omission).
+
+Scenarios:
+  * steady/<tier>   read-heavy YCSB-B at each consistency tier — how much
+                    tail each rung of the ladder costs under no faults.
+  * tenants/<name>  multi-tenant mix (OLTP writes + session-tier analytic
+                    scans) sharing one cluster — cross-tenant tail
+                    interference.
+  * chaos/kill_leader   the same load with a seeded leader kill + restart
+                    mid-run: p99 split into steady / fault / recovered
+                    phases, plus zero-violation linearizability evidence.
+  * chaos/mixed     a generated (seeded) schedule mixing leader isolation,
+                    lossy windows and GC storms.
+
+Every chaos row's {seed, schedule} is recorded into BENCH_fig_tail.json —
+rerunning with those values reproduces the exact fault timeline (pinned
+by tests/test_chaos_harness.py).
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks import common
+from repro.core.client import LEASE, LINEARIZABLE, SESSION
+from repro.core.cluster import Cluster
+from repro.core.workload import (ChaosSchedule, Tenant, WorkloadSpec,
+                                 run_workload)
+
+N_KEYS = 600 if common.FULL else 240
+VSIZE = 512
+N_OPS = 900 if common.FULL else 360
+RATE = 800.0           # offered arrivals/s — below service capacity, so
+                       # steady-state queues stay shallow and the chaos
+                       # rows isolate the FAILOVER's queue, not overload
+
+
+def _cluster(seed: int, n_keys: int, vsize: int) -> Cluster:
+    wd = tempfile.mkdtemp(prefix="fig_tail_")
+    return Cluster(n=3, engine="nezha", workdir=wd, seed=seed,
+                   engine_kwargs={"gc_threshold": max(
+                       (n_keys // 4) * vsize, 24 << 10),
+                       "gc_batch": 128, "level_fanout": 2})
+
+
+def _fmt(rep, label: str) -> str:
+    h = rep.hist.get(label)
+    q = rep.queue_hist.get(label)
+    s = rep.service_hist.get(label)
+    if h is None or h.n == 0:
+        return "n=0"
+    return (f"n={h.n};p50_us={h.quantile(.5):.0f}"
+            f";p99_us={h.quantile(.99):.0f}"
+            f";p999_us={h.quantile(.999):.0f}"
+            f";queue_p99_us={q.quantile(.99):.0f}"
+            f";service_p99_us={s.quantile(.99):.0f}")
+
+
+def _chaos_row(name, rep, seed):
+    """Phase p99s + the bounded-through-failover evidence the smoke gate
+    asserts: recovered-phase p99 vs steady-phase p99, zero violations."""
+    steady = rep.merged("steady")
+    fault = rep.merged("fault")
+    rec = rep.merged("recovered")
+    base = max(steady.quantile(.99), 1.0)
+    ratio = rec.quantile(.99) / base
+    return (name, steady.mean(),
+            f"violations={len(rep.violations)}"
+            f";faults={len(rep.timeline)}"
+            f";steady_p99_us={steady.quantile(.99):.0f}"
+            f";fault_p99_us={fault.quantile(.99):.0f}"
+            f";recovered_p99_us={rec.quantile(.99):.0f}"
+            f";p99_ratio={ratio:.2f}"
+            f";refused={sum(rep.refused.values())}"
+            f";achieved_rate={rep.achieved_rate:.0f}"
+            f";chaos_seed={seed}")
+
+
+def chaos_smoke(n_keys=100, vsize=256, n_ops=600, rate=600.0, seed=7):
+    """One seeded kill-and-recover cycle at smoke scale.  The --smoke gate
+    asserts on this row: zero linearizability/session violations through a
+    leader kill, and recovered-phase p99 within 10x of steady-state p99.
+    600 ops at a modest rate keeps each phase's p99 off the sample max and
+    lets noise-induced backlogs drain inside the phase."""
+    c = _cluster(seed, n_keys, vsize)
+    spec = WorkloadSpec(rate=rate, n_ops=n_ops, n_keys=n_keys, vsize=vsize,
+                        seed=seed, tenants=(Tenant("t", 1.0, "A"),))
+    rep = run_workload(c, spec, ChaosSchedule.kill_and_recover(seed=seed))
+    row = _chaos_row("smoke_chaos/kill_leader", rep, seed)
+    common.destroy(c)
+    return [row]
+
+
+def run(n_keys=None, vsize=None, n_ops=None, rate=None, seed=21,
+        extras=None):
+    n_keys = n_keys or N_KEYS
+    vsize = vsize or VSIZE
+    n_ops = n_ops or N_OPS
+    rate = rate or RATE
+    rows = []
+
+    # ---- steady-state tier ladder -------------------------------------
+    for tier in (LINEARIZABLE, LEASE, SESSION):
+        c = _cluster(seed, n_keys, vsize)
+        spec = WorkloadSpec(rate=rate, n_ops=n_ops, n_keys=n_keys,
+                            vsize=vsize, seed=seed,
+                            tenants=(Tenant("t", 1.0, "B", tier=tier),))
+        rep = run_workload(c, spec)
+        assert not rep.violations, rep.violations[:3]
+        get = f"get:{tier}"
+        rows.append((f"fig_tail/steady/{tier}",
+                     rep.hist[get].mean() if get in rep.hist else 0.0,
+                     _fmt(rep, get) + f";put_p99_us="
+                     f"{rep.hist['put'].quantile(.99):.0f}"
+                     f";achieved_rate={rep.achieved_rate:.0f}"))
+        common.destroy(c)
+
+    # ---- multi-tenant interference ------------------------------------
+    c = _cluster(seed, n_keys, vsize)
+    spec = WorkloadSpec(
+        rate=rate, n_ops=n_ops, n_keys=n_keys, vsize=vsize, seed=seed,
+        tenants=(Tenant("oltp", 2.0, "A", tier=LINEARIZABLE),
+                 Tenant("scan", 1.0, "E", tier=SESSION)))
+    rep = run_workload(c, spec)
+    assert not rep.violations, rep.violations[:3]
+    rows.append(("fig_tail/tenants/oltp",
+                 rep.hist["oltp:put"].mean(),
+                 _fmt(rep, "oltp:get:linearizable") + ";put_p99_us="
+                 f"{rep.hist['oltp:put'].quantile(.99):.0f}"))
+    rows.append(("fig_tail/tenants/scan",
+                 rep.hist["scan:scan:session"].mean(),
+                 _fmt(rep, "scan:scan:session")))
+    common.destroy(c)
+
+    # ---- chaos: one kill-and-recover cycle ----------------------------
+    chaos_extra = {}
+    c = _cluster(seed, n_keys, vsize)
+    spec = WorkloadSpec(rate=rate, n_ops=n_ops, n_keys=n_keys, vsize=vsize,
+                        seed=seed, tenants=(Tenant("t", 1.0, "A"),))
+    chaos = ChaosSchedule.kill_and_recover(seed=seed)
+    rep = run_workload(c, spec, chaos)
+    rows.append(_chaos_row("fig_tail/chaos/kill_leader", rep, seed))
+    chaos_extra["kill_leader"] = {"chaos": rep.chaos,
+                                  "timeline": rep.timeline,
+                                  "phases": {p: {"ops": rep.phase_ops[p]}
+                                             for p in rep.phase_ops}}
+    common.destroy(c)
+
+    # ---- chaos: generated mixed schedule ------------------------------
+    c = _cluster(seed, n_keys, vsize)
+    spec = WorkloadSpec(rate=rate, n_ops=n_ops, n_keys=n_keys, vsize=vsize,
+                        seed=seed,
+                        tenants=(Tenant("rw", 2.0, "A"),
+                                 Tenant("ro", 1.0, "C", tier=SESSION)))
+    chaos = ChaosSchedule.generate(seed, n_cycles=2)
+    rep = run_workload(c, spec, chaos)
+    rows.append(_chaos_row("fig_tail/chaos/mixed", rep, seed))
+    chaos_extra["mixed"] = {"chaos": rep.chaos, "timeline": rep.timeline}
+    common.destroy(c)
+
+    if extras is not None:
+        extras["chaos"] = chaos_extra
+    return rows
+
+
+if __name__ == "__main__":
+    extras = {}
+    rows = run(extras=extras)
+    common.emit(rows)
+    common.write_artifact("fig_tail", rows, extra=extras)

@@ -228,7 +228,83 @@ class Cluster:
             })
         return out
 
+    # --------------------------------------------------------------- health
+    def health_report(self) -> dict:
+        """One scrapeable document merging liveness, Raft progress, the
+        network's fault state, read_report() and replication_report() —
+        the /metrics analogue the ROADMAP's workload-harness item asks
+        for.  The chaos harness snapshots it around every fault; anything
+        external (a test, a dashboard, a future HTTP endpoint) reads this
+        instead of poking node internals."""
+        ld = self.leader()
+        nodes = []
+        for i, nd in enumerate(self.nodes):
+            if nd is None:
+                nodes.append({"node": i, "up": False})
+                continue
+            nodes.append({
+                "node": i, "up": i not in self.net.down,
+                "role": nd.role, "term": nd.current_term,
+                "commit_index": nd.commit_index,
+                "last_applied": nd.last_applied,
+                "lease_valid": nd.lease_valid(),
+            })
+        return {
+            "time": self.net.time,
+            "leader": ld.nid if ld is not None else None,
+            "nodes": nodes,
+            "net": {"sent_msgs": self.net.sent_msgs,
+                    "dropped_msgs": self.net.dropped_msgs,
+                    "drop_prob": self.net.drop_prob,
+                    "down": sorted(self.net.down),
+                    "partitions": [sorted(p) for p in self.net.blocked]},
+            "reads": self.read_report(),
+            "replication": self.replication_report(),
+        }
+
     # --------------------------------------------------------------- faults
+    # The chaos scheduler (repro/core/workload.py) drives faults through
+    # these hooks only — tests and schedules stay independent of SimNet
+    # internals, and every hook is deterministic given the cluster seeds.
+    def partition(self, a: int, b: int):
+        self.net.partition(a, b)
+
+    def heal(self, a: int = None, b: int = None):
+        self.net.heal(a, b)
+
+    def isolate(self, i: int):
+        """Symmetric partition: cut every link touching node i."""
+        for j in range(self.n):
+            if j != i:
+                self.net.partition(i, j)
+
+    def set_drop_prob(self, p: float):
+        """Net-wide lossy window (chaos 'lossy' action); 0 restores."""
+        self.net.drop_prob = p
+
+    def kill_leader(self, max_ticks: int = 2000) -> int:
+        """Crash the current leader (electing one first if none is
+        settled); returns its node id so the schedule can restart it."""
+        ld = self.elect(max_ticks)
+        self.crash(ld.nid)
+        return ld.nid
+
+    def force_gc(self, drain: bool = True) -> bool:
+        """GC-storm hook: start a flush cycle on the leader's engine NOW,
+        regardless of gc_threshold, and (by default) drain it plus any
+        cascading level merges synchronously — the chaos scheduler uses
+        it to pile GC work onto the serving path.  Returns False when the
+        engine has no leveled GC (baseline engines)."""
+        ld = self.elect()
+        eng = self.engines[ld.nid]
+        if not hasattr(eng, "run_gc_to_completion"):
+            return False
+        if eng.gc_completed and eng._merge is None:
+            eng.start_gc()       # no-op on an empty active segment
+        if drain:
+            eng.run_gc_to_completion()
+        return True
+
     def crash(self, i: int):
         self.net.crash(i)
         if self.engines[i] is not None:

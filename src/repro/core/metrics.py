@@ -8,10 +8,114 @@ refute) it at any scale.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+
+class LatencyHistogram:
+    """HDR-style log-bucketed histogram: O(1) record, bounded relative
+    error, exact mergeability.
+
+    Bucket 0 covers [0, min_value); bucket i >= 1 covers
+    [min_value * growth^(i-1), min_value * growth^i), so every recorded
+    value lands in a bucket whose width is a fixed ~(growth-1) fraction of
+    the value — the same trick HdrHistogram uses to cover a huge dynamic
+    range in a handful of counters.  Quantiles report the bucket's upper
+    edge, so a reported quantile is never below the exact (nearest-rank)
+    sample quantile and is within ONE bucket of it (pinned by the minihyp
+    property test in tests/test_chaos_harness.py).  merge() of two
+    histograms is bucket-exact: identical to the histogram of the
+    concatenated samples.
+
+    Units are the caller's choice; the workload harness records
+    microseconds (min_value=0.1us resolves sub-microsecond service times,
+    ~4%-wide buckets keep p999 honest)."""
+
+    __slots__ = ("min_value", "growth", "_log_g", "counts", "n", "total",
+                 "max_seen", "min_seen")
+
+    def __init__(self, min_value: float = 0.1, growth: float = 1.04):
+        if min_value <= 0 or growth <= 1:
+            raise ValueError("need min_value > 0 and growth > 1")
+        self.min_value = min_value
+        self.growth = growth
+        self._log_g = math.log(growth)
+        self.counts: Dict[int, int] = defaultdict(int)
+        self.n = 0
+        self.total = 0.0
+        self.max_seen = 0.0
+        self.min_seen = math.inf
+
+    def bucket(self, value: float) -> int:
+        if value < self.min_value:
+            return 0
+        return 1 + int(math.log(value / self.min_value) / self._log_g)
+
+    def bucket_edge(self, idx: int) -> float:
+        """Upper edge of bucket `idx` — the quantile representative."""
+        return self.min_value * self.growth ** idx
+
+    def record(self, value: float, count: int = 1):
+        self.counts[self.bucket(value)] += count
+        self.n += count
+        self.total += value * count
+        if value > self.max_seen:
+            self.max_seen = value
+        if value < self.min_seen:
+            self.min_seen = value
+
+    def quantile(self, q: float) -> float:
+        """Nearest-rank quantile, reported as its bucket's upper edge
+        (>= the exact sample quantile, < one bucket above it)."""
+        if self.n == 0:
+            return 0.0
+        rank = max(1, math.ceil(q * self.n))
+        cum = 0
+        for idx in sorted(self.counts):
+            cum += self.counts[idx]
+            if cum >= rank:
+                return self.bucket_edge(idx)
+        return self.bucket_edge(max(self.counts))    # q > 1 safety
+
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold `other` into self (same geometry required) and return
+        self.  Bucket-exact: merge(a, b) == histogram of a's and b's
+        samples concatenated."""
+        if (self.min_value, self.growth) != (other.min_value, other.growth):
+            raise ValueError("histogram geometries differ: cannot merge")
+        for idx, cnt in other.counts.items():
+            self.counts[idx] += cnt
+        self.n += other.n
+        self.total += other.total
+        self.max_seen = max(self.max_seen, other.max_seen)
+        self.min_seen = min(self.min_seen, other.min_seen)
+        return self
+
+    def copy(self) -> "LatencyHistogram":
+        out = LatencyHistogram(self.min_value, self.growth)
+        return out.merge(self)
+
+    def summary(self) -> dict:
+        return {"n": self.n, "mean": round(self.mean(), 3),
+                "p50": round(self.quantile(0.50), 3),
+                "p90": round(self.quantile(0.90), 3),
+                "p99": round(self.quantile(0.99), 3),
+                "p999": round(self.quantile(0.999), 3),
+                "max": round(self.max_seen, 3)}
+
+
+# counter fields covered by Metrics.snapshot()/delta(): per-category dicts
+# and flat ints.  gc_cycle_log is summarized by length (gc_cycles).
+_SNAP_DICTS = ("write_bytes", "read_bytes", "write_ops", "read_ops",
+               "cache_hits", "ship_bytes", "ship_ops", "read_tiers")
+_SNAP_INTS = ("fsyncs", "bloom_skips", "read_quorum_rounds",
+              "follower_serves", "session_stalls")
 
 
 @dataclass
@@ -119,6 +223,37 @@ class Metrics:
 
     def record_latency(self, op: str, seconds: float):
         self.latencies_us[op].append(seconds * 1e6)
+
+    # ------------------------------------------------------ phase windows
+    # Every counter above is ENGINE-LIFETIME cumulative; any "how much did
+    # phase X cost" report that reads them raw double-counts everything
+    # that happened before the phase.  snapshot() freezes the counters and
+    # delta() reports only what happened since — the workload harness uses
+    # it for pre-fault vs post-fault accounting, fig_reads for per-tier
+    # quorum-round pricing and fig_runship for per-phase byte accounting.
+    def snapshot(self) -> dict:
+        """Frozen copy of every counter (plain dict, JSON-able)."""
+        snap = {k: dict(getattr(self, k)) for k in _SNAP_DICTS}
+        for k in _SNAP_INTS:
+            snap[k] = getattr(self, k)
+        snap["gc_cycles"] = len(self.gc_cycle_log)
+        return snap
+
+    def delta(self, since: Optional[dict] = None) -> dict:
+        """Counter movement since `since` (a snapshot() result); with no
+        baseline, the full lifetime totals in snapshot() shape.  Zero
+        movement in a category is omitted from the per-category dicts."""
+        since = since or {}
+        out = {}
+        for k in _SNAP_DICTS:
+            base = since.get(k, {})
+            out[k] = {c: v - base.get(c, 0)
+                      for c, v in getattr(self, k).items()
+                      if v != base.get(c, 0)}
+        for k in _SNAP_INTS:
+            out[k] = getattr(self, k) - since.get(k, 0)
+        out["gc_cycles"] = len(self.gc_cycle_log) - since.get("gc_cycles", 0)
+        return out
 
     def total_writes(self) -> int:
         return sum(self.write_bytes.values())

@@ -3,18 +3,31 @@
 Seeded delays, message drops, and pairwise partitions — the substrate for
 fault-injection tests (crash, partition, heal) with fully reproducible
 schedules.
+
+Chaos-harness surface (repro/core/workload.py rides on all three):
+  * per-link injection: `set_link(a, b, ...)` overrides the delay range
+    and/or adds a lossy window on one {a,b} link — single-link latency
+    spikes and asymmetric loss without touching the rest of the fabric;
+  * forked RNG streams: `fork_rng(tag)` derives an independent seeded
+    stream from (seed, tag), so a chaos schedule can draw randomness
+    without perturbing the delivery sequence (same seed => same
+    deliveries, with or without chaos consumers);
+  * delivery trace: `enable_trace()` records (time, dst, src, msg-type)
+    for every delivery — the replayable signature the chaos determinism
+    test compares across same-seed runs.
 """
 from __future__ import annotations
 
 import heapq
 import random
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 
 class SimNet:
     def __init__(self, node_ids, seed: int = 0, min_delay: int = 1,
                  max_delay: int = 3, drop_prob: float = 0.0):
         self.time = 0
+        self.seed = seed
         self.rng = random.Random(seed)
         self.min_delay, self.max_delay = min_delay, max_delay
         self.drop_prob = drop_prob
@@ -23,6 +36,11 @@ class SimNet:
         self._seq = 0
         self.blocked: set = set()      # frozenset({a,b}) pairs
         self.down: set = set()         # crashed nodes
+        # per-link overrides: frozenset({a,b}) -> (min_delay, max_delay)
+        # and -> drop probability (falls back to the net-wide defaults)
+        self.link_delay: Dict[frozenset, Tuple[int, int]] = {}
+        self.link_drop: Dict[frozenset, float] = {}
+        self.trace: Optional[List[Tuple[int, int, int, str]]] = None
         self.sent_msgs = 0
         self.sent_bytes = 0
         # every message the network discarded, whether refused at send time
@@ -31,17 +49,57 @@ class SimNet:
         # run-shipping chunk retransmission) must cover
         self.dropped_msgs = 0
 
+    def fork_rng(self, tag: str) -> random.Random:
+        """Independent seeded stream derived from (seed, tag).  Chaos
+        schedules / jitter sources draw here instead of from `rng`, so
+        their draws can never shift a delivery delay (determinism)."""
+        return random.Random(f"{self.seed}:{tag}")
+
+    def enable_trace(self):
+        """Start recording delivery order; see module docstring."""
+        self.trace = []
+
+    # ------------------------------------------------------ link injection
+    def set_link(self, a: int, b: int, *,
+                 min_delay: Optional[int] = None,
+                 max_delay: Optional[int] = None,
+                 drop_prob: Optional[float] = None):
+        """Override one {a,b} link: a delay range (both bounds required
+        together) and/or a loss probability.  Unset aspects keep the
+        net-wide defaults; clear_link() removes the override."""
+        pair = frozenset((a, b))
+        if (min_delay is None) != (max_delay is None):
+            raise ValueError("set_link needs both delay bounds or neither")
+        if min_delay is not None:
+            self.link_delay[pair] = (min_delay, max_delay)
+        if drop_prob is not None:
+            self.link_drop[pair] = drop_prob
+
+    def clear_link(self, a: int = None, b: int = None):
+        """Remove one {a,b} override, or every override when a is None."""
+        if a is None:
+            self.link_delay.clear()
+            self.link_drop.clear()
+        else:
+            pair = frozenset((a, b))
+            self.link_delay.pop(pair, None)
+            self.link_drop.pop(pair, None)
+
+    # ------------------------------------------------------------ transport
     def send(self, src: int, dst: int, msg: Any, size: int = 0):
         if src in self.down or dst in self.down:
             self.dropped_msgs += 1
             return
-        if frozenset((src, dst)) in self.blocked:
+        pair = frozenset((src, dst))
+        if pair in self.blocked:
             self.dropped_msgs += 1
             return
-        if self.drop_prob and self.rng.random() < self.drop_prob:
+        p = self.link_drop.get(pair, self.drop_prob)
+        if p and self.rng.random() < p:
             self.dropped_msgs += 1
             return
-        delay = self.rng.randint(self.min_delay, self.max_delay)
+        lo, hi = self.link_delay.get(pair, (self.min_delay, self.max_delay))
+        delay = self.rng.randint(lo, hi)
         self._seq += 1
         heapq.heappush(self._q[dst], (self.time + delay, self._seq, src, msg))
         self.sent_msgs += 1
@@ -54,6 +112,8 @@ class SimNet:
         q = self._q[nid]
         while q and q[0][0] <= self.time:
             _, _, src, msg = heapq.heappop(q)
+            if self.trace is not None:
+                self.trace.append((self.time, nid, src, type(msg).__name__))
             out.append((src, msg))
         return out
 

@@ -1,0 +1,639 @@
+"""Open-loop workload harness + deterministic chaos scheduler + checker.
+
+Every closed-loop benchmark in benchmarks/ measures mean ops/s: issue an
+op, wait, issue the next.  Production traffic is OPEN-LOOP — requests
+arrive on their own schedule (a Poisson process), pile up behind a slow
+server, and are judged on tail quantiles, not means.  The classic trap
+(coordinated omission) is that a closed-loop driver silently stops
+offering load exactly when the system stalls — a leader election that
+freezes the store for 50ms costs ONE closed-loop sample but delays every
+open-loop arrival that lands inside the stall.  This module is the
+harness that measures the difference, and the chaos scheduler that makes
+the stalls happen on purpose:
+
+  * WorkloadSpec / Tenant: Poisson arrivals at a target rate, Zipfian
+    hot-key skew, YCSB A-F read/write/scan/RMW mixes (extending fig8),
+    multi-tenant mixes with per-tenant consistency tiers (SESSION tenants
+    carry a real client Session).
+  * Open-loop reconstruction: ops execute sequentially against the
+    cluster (it is a single-process discrete-event sim) and their wall
+    clock service times are replayed against the arrival schedule:
+        start_i      = max(arrival_i, completion_{i-1})
+        completion_i = start_i + service_i
+        latency_i    = completion_i - arrival_i   (queue + service)
+    which is exactly the coordinated-omission correction: an op stuck
+    behind a failover inflates the latency of every queued arrival.
+  * LatencyHistogram (metrics.py) per (tenant, op, tier) and per phase
+    (steady / fault / recovered), with the queue-delay vs service-time
+    split recorded separately.
+  * ChaosSchedule: seeded, deterministic fault scripts — leader kill +
+    restart, leader isolation (symmetric) and single-link partitions,
+    net-wide `drop_prob` lossy windows, GC storms (forced flush+merge
+    cycles) — fired at op-index points so the timeline is replayable
+    from {seed, schedule} alone (recorded into every report/artifact).
+  * check_history(): every run's history is checked for linearizability
+    violations (a LINEARIZABLE/LEASE read must return the latest acked
+    write — a sequential client makes this exact, not heuristic) and for
+    session-guarantee violations (read-your-writes + monotonic reads per
+    key), reusing the same per-key write-sequence bookkeeping the
+    session-token machinery implements cluster-side.
+
+Determinism: every decision that touches the cluster (op kinds, keys,
+values, fault points, fault targets) derives from the spec/schedule seeds
+and the cluster's own seeded RNGs; wall-clock only feeds the histograms.
+Same seeds => identical fault timeline AND identical SimNet delivery
+order (tests/test_chaos_harness.py pins both).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.client import (LEASE, LINEARIZABLE, SESSION, Session,
+                               StaleReadError)
+from repro.core.metrics import LatencyHistogram
+
+# ---------------------------------------------------------------- workloads
+# YCSB-style op mixes (fractions must sum to <= 1; the remainder is reads).
+# `insert` routes the write fraction to NEW keys (D/E's growing keyspace).
+MIXES: Dict[str, dict] = {
+    "load": dict(write=1.00, scan=0.00, rmw=0.00, insert=True),
+    "A":    dict(write=0.50, scan=0.00, rmw=0.00, insert=False),
+    "B":    dict(write=0.05, scan=0.00, rmw=0.00, insert=False),
+    "C":    dict(write=0.00, scan=0.00, rmw=0.00, insert=False),
+    "D":    dict(write=0.05, scan=0.00, rmw=0.00, insert=True),
+    "E":    dict(write=0.05, scan=0.95, rmw=0.00, insert=True),
+    "F":    dict(write=0.00, scan=0.00, rmw=0.50, insert=False),
+}
+
+PHASES = ("steady", "fault", "recovered")
+
+
+@dataclass
+class Tenant:
+    """One traffic class: a weight (share of arrivals), a YCSB mix and a
+    consistency tier.  SESSION tenants get a real client Session, so their
+    reads exercise follower serving + token stalls."""
+    name: str = "default"
+    weight: float = 1.0
+    mix: str = "B"
+    tier: str = LINEARIZABLE
+
+    def mix_spec(self) -> dict:
+        if isinstance(self.mix, dict):
+            return self.mix
+        return MIXES[self.mix]
+
+
+@dataclass
+class WorkloadSpec:
+    rate: float = 2000.0       # open-loop arrivals per second
+    n_ops: int = 400
+    n_keys: int = 200          # preloaded keyspace
+    vsize: int = 256
+    zipf_theta: float = 1.2    # numpy zipf 'a' parameter (hot-key skew)
+    scan_span: int = 20        # keys per scan
+    seed: int = 0
+    tenants: Tuple[Tenant, ...] = (Tenant(),)
+
+    def record(self) -> dict:
+        d = asdict(self)
+        d["tenants"] = [asdict(t) for t in self.tenants]
+        return d
+
+
+def _key(i: int) -> bytes:
+    return b"wk%08d" % i
+
+
+def _value(key: bytes, wseq: int, vsize: int) -> bytes:
+    """Deterministic, per-write-unique value: the key + a global write
+    sequence number, padded to vsize — a stale read names exactly which
+    write it resurrected."""
+    stamp = b"%s:%08d:" % (key, wseq)
+    return stamp + b"x" * max(0, vsize - len(stamp))
+
+
+def zipf_key_indices(n_ops: int, n_keys: int, theta: float, seed: int):
+    """Deterministic Zipfian key choices (hot-head skew), 0-based."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = []
+    need = n_ops
+    while need > 0:
+        draw = rng.zipf(theta, size=max(2 * need, 64))
+        draw = draw[draw <= n_keys][:need]
+        out.append(draw)
+        need -= len(draw)
+    return (np.concatenate(out)[:n_ops] - 1).astype(int)
+
+
+# ------------------------------------------------------------------- chaos
+# Fault actions, all routed through Cluster's fault hooks:
+#   kill_leader      crash the current leader (remembers who for restart)
+#   restart          restart the most recently killed node
+#   isolate_leader   symmetric partition of the current leader
+#   partition_link   cut one {a,b} link (arg encodes the pair, a*n+b)
+#   heal             clear every partition
+#   lossy            net-wide drop_prob window (arg = probability)
+#   heal_lossy       end the lossy window
+#   gc_storm         force a flush + cascading merges on the leader NOW
+ACTIONS = ("kill_leader", "restart", "isolate_leader", "partition_link",
+           "heal", "lossy", "heal_lossy", "gc_storm")
+
+
+@dataclass
+class FaultEvent:
+    at: float                 # position in the run: fraction of n_ops [0,1)
+    action: str
+    arg: float = 0.0
+    recovery: bool = False    # marks the end of a disruption window
+
+    def __post_init__(self):
+        if self.action not in ACTIONS:
+            raise ValueError(f"unknown chaos action {self.action!r}")
+
+
+class ChaosSchedule:
+    """A seeded, deterministic fault script.  Events fire when the op
+    index crosses `at * n_ops`, so the timeline is a pure function of
+    {seed, schedule} + the cluster seeds — wall clock never moves a
+    fault.  record() is the replayable artifact every bench/report logs."""
+
+    def __init__(self, events: Sequence[FaultEvent], seed: int = 0):
+        self.events = sorted(events, key=lambda e: e.at)
+        self.seed = seed
+
+    @classmethod
+    def kill_and_recover(cls, at: float = 0.35, restart_at: float = 0.6,
+                         seed: int = 0) -> "ChaosSchedule":
+        """The canonical smoke cycle: one leader kill, one restart."""
+        return cls([FaultEvent(at, "kill_leader"),
+                    FaultEvent(restart_at, "restart", recovery=True)],
+                   seed=seed)
+
+    @classmethod
+    def generate(cls, seed: int, n_cycles: int = 2,
+                 kinds: Sequence[str] = ("kill_leader", "isolate_leader",
+                                         "lossy", "gc_storm"),
+                 n_nodes: int = 3) -> "ChaosSchedule":
+        """Deterministic random script: the run is split into n_cycles
+        windows, each getting one fault in its first half and the
+        matching recovery in its second half.  Same seed => identical
+        script; different seeds diverge (pinned by test)."""
+        rng = random.Random(f"chaos:{seed}")
+        events: List[FaultEvent] = []
+        for ci in range(n_cycles):
+            lo = ci / n_cycles
+            span = 1.0 / n_cycles
+            kind = rng.choice(list(kinds))
+            start = lo + span * rng.uniform(0.10, 0.40)
+            stop = lo + span * rng.uniform(0.55, 0.85)
+            if kind == "kill_leader":
+                events += [FaultEvent(start, "kill_leader"),
+                           FaultEvent(stop, "restart", recovery=True)]
+            elif kind == "isolate_leader":
+                events += [FaultEvent(start, "isolate_leader"),
+                           FaultEvent(stop, "heal", recovery=True)]
+            elif kind == "partition_link":
+                a = rng.randrange(n_nodes)
+                b = (a + 1 + rng.randrange(n_nodes - 1)) % n_nodes
+                events += [FaultEvent(start, "partition_link",
+                                      arg=a * n_nodes + b),
+                           FaultEvent(stop, "heal", recovery=True)]
+            elif kind == "lossy":
+                events += [FaultEvent(start, "lossy",
+                                      arg=rng.choice((0.05, 0.1, 0.2))),
+                           FaultEvent(stop, "heal_lossy", recovery=True)]
+            else:
+                events.append(FaultEvent(start, "gc_storm", recovery=True))
+        return cls(events, seed=seed)
+
+    def record(self) -> dict:
+        return {"seed": self.seed,
+                "schedule": [asdict(e) for e in self.events]}
+
+
+class _ChaosRunner:
+    """Applies a schedule against a live cluster, op index by op index,
+    and keeps the replayable timeline + the phase pointer."""
+
+    def __init__(self, cluster, schedule: ChaosSchedule, n_ops: int):
+        self.cluster = cluster
+        self.pending = list(schedule.events)
+        self.n_ops = n_ops
+        self.killed: List[int] = []
+        self.timeline: List[dict] = []
+        self.phase = "steady"
+        self._recoveries = sum(1 for e in schedule.events if e.recovery)
+
+    def fire_due(self, op_index: int):
+        while self.pending and self.pending[0].at * self.n_ops <= op_index:
+            ev = self.pending.pop(0)
+            detail = self._apply(ev)
+            self.timeline.append({"op": op_index, "action": ev.action,
+                                  "detail": detail})
+            if self.phase == "steady":
+                self.phase = "fault"
+            if ev.recovery:
+                self._recoveries -= 1
+                if self._recoveries == 0:
+                    self.phase = "recovered"
+
+    def _apply(self, ev: FaultEvent):
+        c = self.cluster
+        if ev.action == "kill_leader":
+            nid = c.kill_leader()
+            self.killed.append(nid)
+            return nid
+        if ev.action == "restart":
+            nid = self.killed.pop() if self.killed else None
+            if nid is not None:
+                c.restart(nid)
+            return nid
+        if ev.action == "isolate_leader":
+            ld = c.elect()
+            c.isolate(ld.nid)
+            return ld.nid
+        if ev.action == "partition_link":
+            a, b = divmod(int(ev.arg), c.n)
+            c.partition(a, b)
+            return [a, b]
+        if ev.action == "heal":
+            c.heal()
+            return None
+        if ev.action == "lossy":
+            c.set_drop_prob(ev.arg)
+            return ev.arg
+        if ev.action == "heal_lossy":
+            c.set_drop_prob(0.0)
+            return None
+        if ev.action == "gc_storm":
+            return c.force_gc()
+        raise AssertionError(ev.action)
+
+
+# ----------------------------------------------------------------- history
+@dataclass
+class OpRecord:
+    """One completed operation, as the checker sees it.  Writes carry the
+    value they wrote (+ the acked raft index); reads carry what came back
+    (get: bytes | None, scan: [(key, value)])."""
+    op: str                       # 'put' | 'get' | 'scan'
+    key: bytes = b""
+    value: object = None
+    tier: str = LINEARIZABLE
+    index: int = 0                # raft index for acked puts
+    session: int = -1             # session id for SESSION ops, -1 = none
+    lo: bytes = b""               # scan range
+    hi: bytes = b""
+
+
+def check_history(records: Sequence[OpRecord]) -> List[str]:
+    """Sequential-history consistency check.  The harness drives ONE
+    logical client, so real-time order == program order and
+    linearizability degenerates to the exact check "a LINEARIZABLE/LEASE
+    read returns the latest acked write"; SESSION ops are held to
+    read-your-writes + monotonic-reads per (session, key) — the same
+    floor the cluster-side session token enforces by raft index, rebuilt
+    here from write sequence numbers so the checker cannot trust the very
+    machinery it audits.  Returns human-readable violation strings."""
+    violations: List[str] = []
+    last: Dict[bytes, Tuple[int, bytes]] = {}      # key -> (seq, value)
+    writes: Dict[bytes, Dict[bytes, int]] = {}     # key -> value -> seq
+    floor: Dict[Tuple[int, bytes], int] = {}       # (session, key) -> seq
+
+    def note(i, msg):
+        violations.append(f"op[{i}] {msg}")
+
+    for i, r in enumerate(records):
+        if r.op == "put":
+            last[r.key] = (i, r.value)
+            writes.setdefault(r.key, {})[r.value] = i
+            if r.session >= 0:
+                floor[(r.session, r.key)] = i
+        elif r.op == "get":
+            known = writes.get(r.key, {})
+            if r.tier in (LINEARIZABLE, LEASE):
+                exp = last.get(r.key, (None, None))[1]
+                if r.value != exp:
+                    if r.value is not None and r.value not in known:
+                        note(i, f"{r.tier} get({r.key!r}) returned a value "
+                                "that was never written")
+                    elif r.value is None:
+                        note(i, f"{r.tier} get({r.key!r}) lost write: "
+                                f"latest acked value missing")
+                    else:
+                        note(i, f"{r.tier} get({r.key!r}) stale read: got "
+                                f"write[{known[r.value]}], latest is "
+                                f"write[{last[r.key][0]}]")
+            else:                                   # SESSION guarantees
+                fl = floor.get((r.session, r.key), -1)
+                if r.value is None:
+                    if fl >= 0:
+                        note(i, f"session get({r.key!r}) lost write: "
+                                f"session observed write[{fl}] but read "
+                                "nothing")
+                elif r.value not in known:
+                    note(i, f"session get({r.key!r}) returned a value "
+                            "that was never written")
+                elif known[r.value] < fl:
+                    note(i, f"session get({r.key!r}) went backwards: got "
+                            f"write[{known[r.value]}] after observing "
+                            f"write[{fl}]")
+                else:
+                    floor[(r.session, r.key)] = known[r.value]
+        elif r.op == "scan":
+            got = dict(r.value or [])
+            if r.tier in (LINEARIZABLE, LEASE):
+                # engine scans are inclusive of BOTH bounds ([lo, hi])
+                exp = {k: v for k, (_, v) in last.items()
+                       if r.lo <= k <= r.hi}
+                if got != exp:
+                    missing = sorted(set(exp) - set(got))
+                    stale = sorted(k for k in got
+                                   if k in exp and got[k] != exp[k])
+                    extra = sorted(set(got) - set(exp))
+                    note(i, f"{r.tier} scan[{r.lo!r},{r.hi!r}) diverged: "
+                            f"missing={missing[:3]} stale={stale[:3]} "
+                            f"extra={extra[:3]}")
+            else:
+                for k, v in got.items():
+                    known = writes.get(k, {})
+                    if v not in known:
+                        note(i, f"session scan returned unwritten value "
+                                f"for {k!r}")
+                    elif known[v] < floor.get((r.session, k), -1):
+                        note(i, f"session scan went backwards on {k!r}")
+                    else:
+                        floor[(r.session, k)] = known[v]
+                for (sid, k), fl in floor.items():
+                    if sid == r.session and r.lo <= k <= r.hi \
+                            and k not in got:
+                        note(i, f"session scan lost write: {k!r} observed "
+                                f"at write[{fl}] but absent from scan")
+        else:
+            note(i, f"unknown op {r.op!r}")
+    return violations
+
+
+# ------------------------------------------------------------------ report
+@dataclass
+class WorkloadReport:
+    spec: dict
+    chaos: Optional[dict]
+    timeline: List[dict]
+    hist: Dict[str, LatencyHistogram]                 # label -> latency
+    queue_hist: Dict[str, LatencyHistogram]           # arrival -> start
+    service_hist: Dict[str, LatencyHistogram]         # start -> completion
+    phase_hist: Dict[str, Dict[str, LatencyHistogram]]
+    phase_ops: Dict[str, int]
+    phase_metrics: Dict[str, dict]                    # summed Metrics.delta
+    phase_net: Dict[str, dict]
+    violations: List[str]
+    refused: Dict[str, int]
+    history: List[OpRecord]
+    offered_rate: float
+    achieved_rate: float
+    duration_s: float
+
+    def merged(self, phase: Optional[str] = None,
+               contains: Optional[str] = None) -> LatencyHistogram:
+        """One histogram over every label matching `contains`, within one
+        phase (or overall) — 'what was p99 across the board after the
+        failover' is merged('recovered').quantile(0.99)."""
+        src = self.phase_hist.get(phase, {}) if phase else self.hist
+        out = LatencyHistogram()
+        for label, h in src.items():
+            if contains is None or contains in label:
+                out.merge(h)
+        return out
+
+    def summary(self) -> dict:
+        """JSON-able digest for BENCH artifacts."""
+        return {
+            "spec": self.spec,
+            "chaos": self.chaos,
+            "timeline": self.timeline,
+            "offered_rate": round(self.offered_rate, 1),
+            "achieved_rate": round(self.achieved_rate, 1),
+            "duration_s": round(self.duration_s, 4),
+            "violations": self.violations,
+            "refused": dict(self.refused),
+            "latency_us": {k: h.summary() for k, h in self.hist.items()},
+            "queue_us": {k: h.summary()
+                         for k, h in self.queue_hist.items()},
+            "service_us": {k: h.summary()
+                           for k, h in self.service_hist.items()},
+            "phases": {p: {"ops": self.phase_ops.get(p, 0),
+                           "latency_us": {k: h.summary()
+                                          for k, h in hs.items()},
+                           "metrics": self.phase_metrics.get(p, {}),
+                           "net": self.phase_net.get(p, {})}
+                       for p, hs in self.phase_hist.items()},
+        }
+
+
+# ------------------------------------------------------------------ runner
+def run_workload(cluster, spec: WorkloadSpec,
+                 chaos: Optional[ChaosSchedule] = None,
+                 check: bool = True, preload: bool = True,
+                 final_scan_check: bool = True) -> WorkloadReport:
+    """Drive `cluster` with the open-loop workload, interleaving the chaos
+    schedule, and return histograms + checked history.  See the module
+    docstring for the latency model."""
+    import time as _time
+
+    rng = random.Random(f"workload:{spec.seed}")
+    arr_rng = random.Random(f"arrivals:{spec.seed}")
+    zipf = zipf_key_indices(spec.n_ops, spec.n_keys, spec.zipf_theta,
+                            spec.seed)
+    tenants = list(spec.tenants)
+    weights = [t.weight for t in tenants]
+    sessions: Dict[int, Session] = {
+        ti: cluster.session() for ti, t in enumerate(tenants)
+        if t.tier == SESSION}
+
+    history: List[OpRecord] = []
+    wseq = 0
+    n_inserted = 0
+
+    def do_put(key: bytes, tier: str, sid: int) -> float:
+        nonlocal wseq
+        val = _value(key, wseq, spec.vsize)
+        wseq += 1
+        t0 = _time.perf_counter()
+        if sid >= 0:
+            idx = sessions[sid].put(key, val)
+        else:
+            idx = cluster.put(key, val)
+        dt = _time.perf_counter() - t0
+        history.append(OpRecord("put", key, val, tier, index=idx,
+                                session=sid))
+        return dt
+
+    # ---- preload: the keyspace every read/scan starts from -------------
+    if preload:
+        items = []
+        for i in range(spec.n_keys):
+            val = _value(_key(i), wseq, spec.vsize)
+            history.append(OpRecord("put", _key(i), val))
+            items.append((_key(i), val))
+            wseq += 1
+        cluster.put_many(items)
+
+    # ---- arrival schedule (Poisson) ------------------------------------
+    arrivals = []
+    t = 0.0
+    for _ in range(spec.n_ops):
+        t += arr_rng.expovariate(spec.rate)
+        arrivals.append(t)
+
+    runner = _ChaosRunner(cluster, chaos, spec.n_ops) if chaos else None
+    hist: Dict[str, LatencyHistogram] = {}
+    qhist: Dict[str, LatencyHistogram] = {}
+    shist: Dict[str, LatencyHistogram] = {}
+    phase_hist: Dict[str, Dict[str, LatencyHistogram]] = {}
+    phase_ops: Dict[str, int] = {}
+    refused: Dict[str, int] = {}
+    samples: List[Tuple[int, str, float]] = []   # (op idx, label, service)
+    phase_of_op: List[str] = []
+    phase_snaps = {"steady": [m.snapshot() for m in cluster.metrics]}
+    phase_net_base = {"steady": (cluster.net.sent_msgs,
+                                 cluster.net.dropped_msgs)}
+    phase_metrics: Dict[str, dict] = {}
+    phase_net: Dict[str, dict] = {}
+
+    def close_phase(name):
+        """Cluster-summed Metrics movement + net movement for `name`."""
+        base = phase_snaps.pop(name, None)
+        if base is None:
+            return
+        deltas = [m.delta(s) for m, s in zip(cluster.metrics, base)]
+        agg = {"fsyncs": 0, "read_quorum_rounds": 0, "gc_bytes": 0,
+               "ship_bytes": 0, "follower_serves": 0, "session_stalls": 0}
+        for d in deltas:
+            agg["fsyncs"] += d["fsyncs"]
+            agg["read_quorum_rounds"] += d["read_quorum_rounds"]
+            agg["follower_serves"] += d["follower_serves"]
+            agg["session_stalls"] += d["session_stalls"]
+            agg["gc_bytes"] += d["write_bytes"].get("gc_sorted", 0) + \
+                d["write_bytes"].get("gc_level_merge", 0)
+            agg["ship_bytes"] += sum(d["ship_bytes"].values())
+        phase_metrics[name] = agg
+        sm, dm = phase_net_base.pop(name)
+        phase_net[name] = {"sent_msgs": cluster.net.sent_msgs - sm,
+                           "dropped_msgs": cluster.net.dropped_msgs - dm}
+
+    # ---- the op loop ---------------------------------------------------
+    cur_phase = "steady"
+    for i in range(spec.n_ops):
+        if runner is not None:
+            runner.fire_due(i)
+            if runner.phase != cur_phase:
+                close_phase(cur_phase)
+                cur_phase = runner.phase
+                phase_snaps[cur_phase] = [m.snapshot()
+                                          for m in cluster.metrics]
+                phase_net_base[cur_phase] = (cluster.net.sent_msgs,
+                                             cluster.net.dropped_msgs)
+        ti = rng.choices(range(len(tenants)), weights=weights)[0]
+        ten = tenants[ti]
+        mix = ten.mix_spec()
+        sid = ti if ten.tier == SESSION else -1
+        ki = int(zipf[i])
+        r = rng.random()
+        label_base = f"{ten.name}:" if len(tenants) > 1 else ""
+        if r < mix["write"]:
+            if mix.get("insert"):
+                ki = spec.n_keys + n_inserted
+                n_inserted += 1
+            label = f"{label_base}put"
+            dt = do_put(_key(ki), ten.tier, sid)
+        elif r < mix["write"] + mix["scan"]:
+            label = f"{label_base}scan:{ten.tier}"
+            lo = _key(ki)
+            hi = _key(ki + spec.scan_span)
+            t0 = _time.perf_counter()
+            try:
+                if sid >= 0:
+                    got = sessions[sid].scan(lo, hi)
+                else:
+                    got = cluster.scan(lo, hi, ten.tier)
+                history.append(OpRecord("scan", value=got, tier=ten.tier,
+                                        session=sid, lo=lo, hi=hi))
+            except StaleReadError:
+                refused[label] = refused.get(label, 0) + 1
+            dt = _time.perf_counter() - t0
+        elif r < mix["write"] + mix["scan"] + mix["rmw"]:
+            label = f"{label_base}rmw:{ten.tier}"
+            t0 = _time.perf_counter()
+            try:
+                if sid >= 0:
+                    got = sessions[sid].get(_key(ki))
+                else:
+                    got = cluster.get(_key(ki), ten.tier)
+                history.append(OpRecord("get", _key(ki), got, ten.tier,
+                                        session=sid))
+            except StaleReadError:
+                refused[label] = refused.get(label, 0) + 1
+            do_put(_key(ki), ten.tier, sid)
+            dt = _time.perf_counter() - t0
+        else:
+            label = f"{label_base}get:{ten.tier}"
+            t0 = _time.perf_counter()
+            try:
+                if sid >= 0:
+                    got = sessions[sid].get(_key(ki))
+                else:
+                    got = cluster.get(_key(ki), ten.tier)
+                history.append(OpRecord("get", _key(ki), got, ten.tier,
+                                        session=sid))
+            except StaleReadError:
+                refused[label] = refused.get(label, 0) + 1
+            dt = _time.perf_counter() - t0
+        samples.append((i, label, dt))
+        phase_of_op.append(cur_phase)
+    if runner is not None:
+        runner.fire_due(spec.n_ops)      # fire any events at the tail
+    close_phase(cur_phase)
+
+    # ---- open-loop reconstruction --------------------------------------
+    completion = 0.0
+    for (i, label, service), phase in zip(samples, phase_of_op):
+        start = max(arrivals[i], completion)
+        completion = start + service
+        lat_us = (completion - arrivals[i]) * 1e6
+        hist.setdefault(label, LatencyHistogram()).record(lat_us)
+        qhist.setdefault(label, LatencyHistogram()).record(
+            (start - arrivals[i]) * 1e6)
+        shist.setdefault(label, LatencyHistogram()).record(service * 1e6)
+        phase_hist.setdefault(phase, {}).setdefault(
+            label, LatencyHistogram()).record(lat_us)
+        phase_ops[phase] = phase_ops.get(phase, 0) + 1
+    duration = completion if samples else 0.0
+
+    # ---- verification --------------------------------------------------
+    violations: List[str] = []
+    if check:
+        if final_scan_check:
+            # end-state audit: one linearizable scan of the whole keyspace
+            # must equal the checker's expected map — a write lost during
+            # chaos that no per-op read happened to cover still shows here
+            got = cluster.scan(_key(0), _key(10 ** 7), LINEARIZABLE)
+            history.append(OpRecord("scan", value=got, tier=LINEARIZABLE,
+                                    lo=_key(0), hi=_key(10 ** 7)))
+        violations = check_history(history)
+
+    return WorkloadReport(
+        spec=spec.record(),
+        chaos=chaos.record() if chaos else None,
+        timeline=runner.timeline if runner else [],
+        hist=hist, queue_hist=qhist, service_hist=shist,
+        phase_hist=phase_hist, phase_ops=phase_ops,
+        phase_metrics=phase_metrics, phase_net=phase_net,
+        violations=violations, refused=refused, history=history,
+        offered_rate=spec.rate,
+        achieved_rate=(len(samples) / duration) if duration else 0.0,
+        duration_s=duration)

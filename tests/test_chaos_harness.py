@@ -1,0 +1,330 @@
+"""Chaos + tail-latency workload harness (repro.core.workload).
+
+What is pinned here, per the harness's own determinism contract:
+
+  * chaos-schedule determinism — the same {seed, schedule} produces the
+    IDENTICAL fault timeline AND the identical SimNet delivery order
+    (message-for-message), while a different chaos seed diverges.  This
+    is the property that makes every BENCH_fig_tail chaos row replayable
+    from the recorded {seed, schedule} alone.
+  * histogram math (minihyp properties) — LatencyHistogram quantiles are
+    nearest-rank within one log bucket of the exact sample quantile, and
+    merge() is bucket-exact: merging two histograms equals the histogram
+    of the concatenated samples.
+  * checker self-test — hand-built histories with a known stale read,
+    lost write, never-written value, session monotonicity break and scan
+    divergence are each flagged; clean histories (including the
+    inclusive-[lo,hi] scan edge) pass.
+  * the supporting surfaces the harness rides on: Metrics.snapshot() /
+    delta() phase accounting, SimNet per-link injection + fork_rng,
+    Cluster.health_report().
+
+`pytest -m chaos` (make chaos) additionally runs a fuller generated
+schedule — kills, isolation, lossy windows and GC storms against a real
+GC-cycling cluster — and asserts the zero-violation + phase-accounting
+invariants end to end.
+"""
+import json
+import math
+import tempfile
+
+import pytest
+
+from repro.core.client import LINEARIZABLE, SESSION
+from repro.core.cluster import Cluster
+from repro.core.metrics import LatencyHistogram, Metrics
+from repro.core.simnet import SimNet
+from repro.core.workload import (ChaosSchedule, FaultEvent, OpRecord,
+                                 Tenant, WorkloadSpec, check_history,
+                                 run_workload)
+from repro.testing.minihyp import given, settings
+from repro.testing.minihyp import strategies as st
+
+
+def make_cluster(n=3, seed=4, **engine_kw):
+    wd = tempfile.mkdtemp(prefix="chaosharness_")
+    kw = {"gc_threshold": 1 << 60}
+    kw.update(engine_kw)
+    return Cluster(n=n, engine="nezha", workdir=wd, seed=seed,
+                   engine_kwargs=kw)
+
+
+# ----------------------------------------------------- chaos determinism
+def _traced_run(chaos_seed, cluster_seed=4, n_ops=120):
+    c = make_cluster(seed=cluster_seed)
+    c.net.enable_trace()
+    spec = WorkloadSpec(rate=5000.0, n_ops=n_ops, n_keys=60, vsize=64,
+                        seed=3, tenants=(Tenant("t", 1.0, "A"),))
+    chaos = ChaosSchedule.generate(chaos_seed, n_cycles=2)
+    rep = run_workload(c, spec, chaos)
+    return rep, list(c.net.trace)
+
+
+def test_same_seed_same_timeline_and_delivery_order():
+    rep1, trace1 = _traced_run(chaos_seed=11)
+    rep2, trace2 = _traced_run(chaos_seed=11)
+    assert rep1.timeline == rep2.timeline
+    assert rep1.timeline, "schedule fired no faults"
+    assert trace1 == trace2, "SimNet delivery order diverged on same seed"
+    assert rep1.violations == [] and rep2.violations == []
+
+
+def test_different_chaos_seed_diverges():
+    rep1, _ = _traced_run(chaos_seed=11)
+    rep2, _ = _traced_run(chaos_seed=12)
+    assert rep1.chaos["schedule"] != rep2.chaos["schedule"]
+    assert rep1.timeline != rep2.timeline
+
+
+def test_generate_is_a_pure_function_of_seed():
+    a = ChaosSchedule.generate(5, n_cycles=3).record()
+    b = ChaosSchedule.generate(5, n_cycles=3).record()
+    c = ChaosSchedule.generate(6, n_cycles=3).record()
+    assert a == b
+    assert a["schedule"] != c["schedule"]
+    # every generated cycle pairs a fault with its recovery marker
+    assert sum(e["recovery"] for e in a["schedule"]) == 3
+
+
+def test_kill_and_recover_timeline_names_the_same_victim():
+    reps = []
+    for _ in range(2):
+        c = make_cluster(seed=9)
+        spec = WorkloadSpec(rate=5000.0, n_ops=100, n_keys=50, vsize=64,
+                            seed=1, tenants=(Tenant("t", 1.0, "A"),))
+        reps.append(run_workload(c, spec,
+                                 ChaosSchedule.kill_and_recover(seed=9)))
+    t1, t2 = reps[0].timeline, reps[1].timeline
+    assert t1 == t2
+    assert [e["action"] for e in t1] == ["kill_leader", "restart"]
+    assert t1[0]["detail"] == t1[1]["detail"]   # restart revives the victim
+    assert reps[0].violations == []
+
+
+def test_unknown_chaos_action_rejected():
+    with pytest.raises(ValueError):
+        FaultEvent(0.5, "meteor_strike")
+
+
+# ------------------------------------------------- histogram properties
+@settings(max_examples=25)
+@given(st.lists(st.integers(min_value=1, max_value=10_000_000),
+                min_size=1, max_size=200),
+       st.sampled_from([0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0]))
+def test_hist_quantile_within_one_bucket_of_exact(samples, q):
+    h = LatencyHistogram()
+    for s in samples:
+        h.record(s)
+    exact = sorted(samples)[max(1, math.ceil(q * len(samples))) - 1]
+    got = h.quantile(q)
+    # reported as the bucket's upper edge: >= the exact sample, and no
+    # more than one bucket (a growth factor) above it
+    assert got >= exact * (1 - 1e-9)
+    assert got <= exact * h.growth ** 2
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(min_value=1, max_value=1_000_000),
+                min_size=0, max_size=100),
+       st.lists(st.integers(min_value=1, max_value=1_000_000),
+                min_size=0, max_size=100))
+def test_hist_merge_equals_concatenation(xs, ys):
+    ha, hb, hcat = (LatencyHistogram() for _ in range(3))
+    for x in xs:
+        ha.record(x)
+        hcat.record(x)
+    for y in ys:
+        hb.record(y)
+        hcat.record(y)
+    ha.merge(hb)
+    assert dict(ha.counts) == dict(hcat.counts)
+    assert ha.n == hcat.n and ha.total == hcat.total
+    assert ha.max_seen == hcat.max_seen
+    for q in (0.5, 0.99, 0.999):
+        assert ha.quantile(q) == hcat.quantile(q)
+
+
+def test_hist_merge_rejects_geometry_mismatch():
+    with pytest.raises(ValueError):
+        LatencyHistogram(min_value=0.1).merge(LatencyHistogram(min_value=1))
+
+
+# ------------------------------------------------- checker self-test
+K, V1, V2, V3 = b"wk00000001", b"v-one", b"v-two", b"v-ghost"
+
+
+def test_checker_clean_history_passes():
+    hist = [OpRecord("put", K, V1),
+            OpRecord("get", K, V1),
+            OpRecord("put", K, V2),
+            OpRecord("get", K, V2, tier=SESSION, session=0),
+            OpRecord("scan", value=[(K, V2)], lo=b"wk", hi=K)]
+    assert check_history(hist) == []
+
+
+def test_checker_flags_stale_read():
+    hist = [OpRecord("put", K, V1), OpRecord("put", K, V2),
+            OpRecord("get", K, V1)]
+    (v,) = check_history(hist)
+    assert "stale read" in v
+
+
+def test_checker_flags_lost_write():
+    hist = [OpRecord("put", K, V1), OpRecord("get", K, None)]
+    (v,) = check_history(hist)
+    assert "lost write" in v
+
+
+def test_checker_flags_never_written_value():
+    hist = [OpRecord("put", K, V1), OpRecord("get", K, V3)]
+    (v,) = check_history(hist)
+    assert "never written" in v
+
+
+def test_checker_session_guarantees():
+    # read-your-writes: the session wrote, then read nothing
+    (v,) = check_history([OpRecord("put", K, V1, session=0),
+                          OpRecord("get", K, None, tier=SESSION, session=0)])
+    assert "lost write" in v
+    # monotonic reads: saw write[1], then went back to write[0]
+    (v,) = check_history([OpRecord("put", K, V1), OpRecord("put", K, V2),
+                          OpRecord("get", K, V2, tier=SESSION, session=0),
+                          OpRecord("get", K, V1, tier=SESSION, session=0)])
+    assert "went backwards" in v
+    # a DIFFERENT session has no floor: the same stale value is legal
+    assert check_history([
+        OpRecord("put", K, V1), OpRecord("put", K, V2),
+        OpRecord("get", K, V2, tier=SESSION, session=0),
+        OpRecord("get", K, V1, tier=SESSION, session=1)]) == []
+
+
+def test_checker_scan_divergence_and_inclusive_bounds():
+    k2 = b"wk00000002"
+    hist = [OpRecord("put", K, V1), OpRecord("put", k2, V2),
+            # engine scans include BOTH bounds: [K, k2] must return both
+            OpRecord("scan", value=[(K, V1), (k2, V2)], lo=K, hi=k2)]
+    assert check_history(hist) == []
+    (v,) = check_history([OpRecord("put", K, V1), OpRecord("put", k2, V2),
+                          OpRecord("scan", value=[(K, V1)], lo=K, hi=k2)])
+    assert "diverged" in v and "missing" in v
+
+
+# ------------------------------------- supporting surfaces the harness uses
+def test_metrics_snapshot_delta():
+    m = Metrics()
+    m.write_bytes["wal"] += 100
+    m.fsyncs += 2
+    snap = m.snapshot()
+    m.write_bytes["wal"] += 50
+    m.read_tiers["lease"] += 3
+    m.fsyncs += 1
+    d = m.delta(snap)
+    assert d["write_bytes"] == {"wal": 50}       # movement only
+    assert d["read_tiers"] == {"lease": 3}
+    assert d["fsyncs"] == 1
+    assert d["read_bytes"] == {}                 # untouched category
+    # no baseline => lifetime totals; snapshot stays frozen
+    assert m.delta()["write_bytes"] == {"wal": 150}
+    assert snap["write_bytes"] == {"wal": 100}
+
+
+def test_simnet_per_link_injection():
+    net = SimNet([0, 1, 2], seed=1, min_delay=1, max_delay=1)
+    net.set_link(0, 1, min_delay=50, max_delay=50)
+    net.send(0, 1, "slow")
+    net.send(0, 2, "fast")
+    for _ in range(2):
+        net.tick()
+    assert [m for _, m in net.deliver(2)] == ["fast"]
+    assert net.deliver(1) == []                  # still in flight
+    for _ in range(49):
+        net.tick()
+    assert [m for _, m in net.deliver(1)] == ["slow"]
+
+    net.set_link(0, 2, drop_prob=1.0)            # lossy single link
+    before = net.dropped_msgs
+    net.send(0, 2, "doomed")
+    net.send(0, 1, "fine")                       # other link unaffected
+    assert net.dropped_msgs == before + 1
+    net.clear_link(0, 2)
+    net.send(0, 2, "alive")
+    assert net.dropped_msgs == before + 1
+
+    with pytest.raises(ValueError):
+        net.set_link(0, 1, min_delay=5)          # needs both bounds
+
+
+def test_simnet_fork_rng_does_not_perturb_delivery():
+    def delays(consume_fork):
+        net = SimNet([0, 1], seed=7, min_delay=1, max_delay=9)
+        out = []
+        for i in range(20):
+            if consume_fork:
+                net.fork_rng(f"chaos:{i}").random()
+            net.send(0, 1, i)
+            q = net._q[1]
+            out.append(q[-1][0] - net.time)
+        return out
+
+    assert delays(False) == delays(True)
+    # and the fork itself is a pure function of (seed, tag)
+    a = SimNet([0], seed=7).fork_rng("x").random()
+    b = SimNet([0], seed=7).fork_rng("x").random()
+    c = SimNet([0], seed=8).fork_rng("x").random()
+    assert a == b != c
+
+
+def test_cluster_health_report():
+    c = make_cluster()
+    c.put(b"k", b"v")
+    ld = c.elect()
+    hr = c.health_report()
+    assert hr["leader"] == ld.nid
+    assert len(hr["nodes"]) == 3
+    assert all(n["up"] for n in hr["nodes"])
+    json.dumps(hr)                               # scrapeable == JSON-able
+    victim = next(i for i in range(3) if i != ld.nid)
+    c.crash(victim)
+    hr = c.health_report()
+    assert hr["nodes"][victim]["up"] is False
+    assert victim in hr["net"]["down"] or victim in list(hr["net"]["down"])
+
+
+# -------------------------------------------------------- end-to-end runs
+def test_workload_report_invariants_small_chaos_run():
+    c = make_cluster(seed=6)
+    spec = WorkloadSpec(rate=4000.0, n_ops=150, n_keys=80, vsize=64,
+                        seed=2,
+                        tenants=(Tenant("rw", 2.0, "A"),
+                                 Tenant("ro", 1.0, "C", tier=SESSION)))
+    rep = run_workload(c, spec, ChaosSchedule.kill_and_recover(seed=6))
+    assert rep.violations == []
+    assert sum(rep.phase_ops.values()) == spec.n_ops
+    assert set(rep.phase_ops) == {"steady", "fault", "recovered"}
+    assert rep.achieved_rate > 0
+    assert rep.chaos["seed"] == 6 and len(rep.chaos["schedule"]) == 2
+    for phase in rep.phase_ops:
+        assert "fsyncs" in rep.phase_metrics[phase]
+        assert "sent_msgs" in rep.phase_net[phase]
+    json.dumps(rep.summary())
+
+
+@pytest.mark.chaos
+def test_full_chaos_schedule_zero_violations():
+    """make chaos: generated kill/isolate/lossy/gc_storm schedule against
+    a cluster that really GC-cycles, all three tiers live, checker on."""
+    c = make_cluster(seed=14, gc_threshold=24 << 10, gc_batch=128,
+                     level_fanout=2)
+    spec = WorkloadSpec(rate=2500.0, n_ops=400, n_keys=150, vsize=256,
+                        seed=5,
+                        tenants=(Tenant("oltp", 2.0, "A"),
+                                 Tenant("mix", 1.0, "F"),
+                                 Tenant("scan", 1.0, "E", tier=SESSION)))
+    chaos = ChaosSchedule.generate(14, n_cycles=3)
+    rep = run_workload(c, spec, chaos)
+    assert rep.violations == [], rep.violations[:5]
+    assert len(rep.timeline) >= 3
+    assert sum(rep.phase_ops.values()) == spec.n_ops
+    # the artifact contract: the run is replayable from {seed, schedule}
+    assert rep.chaos == chaos.record()
+    json.dumps(rep.summary())
