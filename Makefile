@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test smoke chaos bench bench-full
+.PHONY: test smoke chaos crash bench bench-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,6 +12,12 @@ smoke:
 # fuller seeded chaos schedules (kill/isolate/lossy/gc_storm) + checker
 chaos:
 	$(PY) -m pytest -q -m chaos
+
+# exhaustive crash-point sweeps at a longer workload than the default
+# test run: every numbered I/O op x {drop,torn,lost_rename}, plus the
+# full-cluster-restart durability gate
+crash:
+	CRASHPOINT_N_OPS=48 $(PY) -m pytest -q -m crashpoint
 
 bench:
 	$(PY) -m benchmarks.run

@@ -34,10 +34,15 @@ def smoke() -> int:
          through one seeded leader kill-and-recover cycle yields ZERO
          linearizability/session violations, both faults fire, and the
          recovered-phase p99 stays within 10x of the steady-state p99.
-         The fault timeline is seed-deterministic; wall-clock latency is
-         not, so the p99 bound gets up to three same-schedule attempts
-         (violations are asserted on every attempt — correctness is
-         never retried away).
+         Latency runs on the virtual clock (SimNet ticks), so the whole
+         row is seed-deterministic and needs exactly one attempt,
+      7. durability gate (crash-point sweep): a seeded 64-point kill -9
+         sweep over the probe workload's numbered I/O ops — picks spread
+         across the op range, cycling drop/torn/lost_rename — recovers
+         every time with zero acked-write loss and a clean structural
+         audit, and one full-cluster restart at a torn point converges
+         byte-equal.  Any failure reproduces from {seed, crash_index,
+         mode} alone (see repro.core.workload.run_crashpoint).
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
@@ -96,19 +101,37 @@ def smoke() -> int:
     rd = {name.split("/", 1)[-1]: common.parse_derived(d)
           for name, _, d in rd_rows}
 
-    # fig_tail at smoke scale: open-loop load through a leader kill.  The
-    # kill/restart schedule is seed-pinned (identical every attempt); the
-    # retries only absorb container CPU-steal freezes in the wall-clock
-    # latency measurement.
+    # fig_tail at smoke scale: open-loop load through a leader kill, on
+    # the virtual clock — seed-deterministic p99s, single attempt
     from benchmarks import fig_tail
-    ch = {}
-    for attempt in range(3):
-        ch_rows = fig_tail.chaos_smoke()
-        for name, us, derived in ch_rows:
-            show(f"{name}/try{attempt}", us, derived)
-        ch = common.parse_derived(ch_rows[0][2])
-        if ch.get("violations", 1) != 0 or ch.get("p99_ratio", 99) <= 10:
-            break
+    ch_rows = fig_tail.chaos_smoke()
+    for name, us, derived in ch_rows:
+        show(name, us, derived)
+    ch = common.parse_derived(ch_rows[0][2])
+
+    # crash-point durability gate: seeded 64-point kill -9 sweep + one
+    # full-cluster (fleet power loss) restart at a torn point
+    import tempfile
+    from repro.core.faultfs import MODES
+    from repro.core.workload import run_crashpoint, run_full_restart
+    cp_total = cp_fail = 0
+    with tempfile.TemporaryDirectory(prefix="smoke_cp_") as cpd:
+        cp_ops = run_crashpoint(f"{cpd}/record", seed=23)["ops"]
+        picks = sorted({(i * cp_ops) // 64 for i in range(64)})
+        for i, k in enumerate(picks):
+            r = run_crashpoint(f"{cpd}/p{k}", seed=23, crash_index=k,
+                               mode=MODES[i % len(MODES)])
+            cp_total += 1
+            if not (r["crashed"] and r["recovered_ok"]):
+                cp_fail += 1
+        fr = run_full_restart(f"{cpd}/fleet", seed=23, crash_index=120,
+                              mode="torn")
+    show("smoke_crashpoints/sweep", 0,
+         f"points={cp_total};failures={cp_fail};io_ops={cp_ops}")
+    show("smoke_crashpoints/full_restart", 0,
+         f"recovered_ok={int(fr['recovered_ok'])}"
+         f";converged={int(fr['converged'])}"
+         f";violations={len(fr['violations'])};audit={len(fr['audit'])}")
 
     ok = True
     if wa["nezha"] > wa["original"]:
@@ -166,6 +189,15 @@ def smoke() -> int:
              f"{ch.get('steady_p99_us', 0):.0f}us_recovered="
              f"{ch.get('recovered_p99_us', 0):.0f}us")
         ok = False
+    if cp_fail:
+        show("smoke/FAIL", 0, "crashpoint_sweep_lost_acked_state_at_"
+             f"{cp_fail}_of_{cp_total}_points_seed23")
+        ok = False
+    if not fr["recovered_ok"]:
+        show("smoke/FAIL", 0, "full_cluster_restart_diverged_converged="
+             f"{int(fr['converged'])}_violations={len(fr['violations'])}"
+             f"_audit={len(fr['audit'])}")
+        ok = False
     if ok:
         show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
              f";original_wa={wa['original']:.2f}"
@@ -179,7 +211,9 @@ def smoke() -> int:
              f";session_scaling_x="
              f"{rd['n3/session_spread'].get('scaling_x', 0):.2f}"
              f";chaos_violations={ch.get('violations', 1):.0f}"
-             f";chaos_p99_ratio={ch.get('p99_ratio', 99):.2f}")
+             f";chaos_p99_ratio={ch.get('p99_ratio', 99):.2f}"
+             f";crashpoints={cp_total}_all_recovered"
+             f";full_restart_ok={int(fr['recovered_ok'])}")
     common.write_artifact("smoke", rows)
     return 0 if ok else 1
 

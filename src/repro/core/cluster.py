@@ -22,6 +22,7 @@ import shutil
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import faultfs
 from repro.core.client import NezhaClient, Session
 from repro.core.engines import ENGINES, NezhaEngine
 from repro.core.metrics import Metrics
@@ -36,7 +37,8 @@ class Cluster:
                  engine_kwargs: Optional[dict] = None, heartbeat_every: int = 5,
                  election_timeout=(20, 40), max_batch: int = 64,
                  drop_prob: float = 0.0, lease_ticks: Optional[int] = None,
-                 default_consistency: str = "linearizable"):
+                 default_consistency: str = "linearizable",
+                 recover: bool = False):
         self.n = n
         self.engine_name = engine
         self.workdir = workdir
@@ -53,8 +55,11 @@ class Cluster:
         self.engines: List = [None] * n
         self.nodes: List[Optional[RaftNode]] = [None] * n
         self.leader_hint = leader_hint
+        # recover=True: full-cluster restart — every node rebuilds from
+        # whatever its directory holds (the durability-gate path; workdir
+        # must be a previous cluster's workdir)
         for i in range(n):
-            self._make_node(i, fresh=True)
+            self._make_node(i, fresh=not recover)
         self.client = NezhaClient(self,
                                   default_consistency=default_consistency)
 
@@ -260,6 +265,11 @@ class Cluster:
                     "partitions": [sorted(p) for p in self.net.blocked]},
             "reads": self.read_report(),
             "replication": self.replication_report(),
+            "faults": {
+                "per_node": [dict(m.fault_injections) for m in self.metrics],
+                "faultfs": (faultfs.active().counters()
+                            if faultfs.active() is not None else None),
+            },
         }
 
     # --------------------------------------------------------------- faults
@@ -289,12 +299,13 @@ class Cluster:
         self.crash(ld.nid)
         return ld.nid
 
-    def force_gc(self, drain: bool = True) -> bool:
+    def force_gc(self, drain: bool = True, max_ticks: int = 8000) -> bool:
         """GC-storm hook: start a flush cycle on the leader's engine NOW,
         regardless of gc_threshold, and (by default) drain it plus any
         cascading level merges synchronously — the chaos scheduler uses
         it to pile GC work onto the serving path.  Returns False when the
-        engine has no leveled GC (baseline engines)."""
+        engine has no leveled GC (baseline engines) or the apply pipeline
+        cannot catch up within max_ticks."""
         ld = self.elect()
         eng = self.engines[ld.nid]
         if not hasattr(eng, "run_gc_to_completion"):
@@ -302,6 +313,17 @@ class Cluster:
         if eng.gc_completed and eng._merge is None:
             eng.start_gc()       # no-op on an empty active segment
         if drain:
+            # gc_step parks at a barrier until the whole active segment
+            # has APPLIED; tick raft forward while it lags, or a force_gc
+            # issued right after a failover spins forever on a leader
+            # whose apply pipeline is still replaying
+            for _ in range(max_ticks):
+                if not (eng.gc_started and not eng.gc_completed) or \
+                        eng._gc_last[0] >= eng._gc_snapshot_point[0]:
+                    break
+                self.tick()
+            else:
+                return False
             eng.run_gc_to_completion()
         return True
 
@@ -311,6 +333,35 @@ class Cluster:
             self.engines[i].close()
         self.nodes[i] = None
         self.engines[i] = None
+
+    def crash_hard(self, i: int):
+        """kill -9: the node is dropped WITHOUT engine.close() — nothing
+        buffered gets a goodbye flush — and the installed FaultFS rewrites
+        the node's directory down to its durable view (torn tails and
+        all).  Falls back to crash() when no FaultFS is installed (then
+        there is no unsynced state to model)."""
+        fs = faultfs.active()
+        if fs is None:
+            return self.crash(i)
+        self.net.crash(i)
+        self.nodes[i] = None
+        self.engines[i] = None      # dropped un-closed on purpose
+        fs.materialize(self._engine_dir(i) + os.sep)
+        self.metrics[i].on_fault("hard_crash")
+
+    def hard_crash_from(self, exc) -> Optional[int]:
+        """Map a SimulatedCrash raised mid-I/O to the node whose directory
+        the op touched, hard-crash that node, and return its id (None if
+        the path maps to no node)."""
+        p = os.path.abspath(exc.path)
+        for i in range(self.n):
+            d = os.path.abspath(self._engine_dir(i))
+            if p == d or p.startswith(d + os.sep):
+                if self.nodes[i] is not None:
+                    self.crash_hard(i)
+                    self.metrics[i].on_fault("mid_op_crash")
+                return i
+        return None
 
     def restart(self, i: int) -> float:
         """Returns wall-clock recovery seconds (Fig. 11 measurement)."""

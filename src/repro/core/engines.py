@@ -67,6 +67,35 @@ Batching / caching knobs (the group-commit I/O pipeline):
       Byte budget of the per-engine BlockCache shared by SSTable blocks,
       SortedStore point records, and ValueLog offset reads.  Per-SSTable
       bloom filters (cache-independent) skip files on point gets.
+
+Durability contract (enforced by the FaultFS crash-point sweep,
+tests/test_crashpoints.py — kill -9 at ANY numbered I/O op):
+
+  Survives, at every crash point (sync=True):
+    * every ACKED write — an entry is fsynced into the value log by
+      commit_window() BEFORE Raft acks/commits it (raft.py), so the acked
+      prefix of the log is always on disk; recovery replays it through the
+      header-only scan.
+    * the manifest epoch / run set — runs_manifest.json, gc_state.json,
+      every run .meta and raft_meta.json commit via
+      faultfs.write_json_atomic (tmp write -> fsync(tmp) -> rename ->
+      fsync(parent dir)); run DATA files are fsynced before their meta
+      declares them complete; retired files are deleted only after the
+      manifest swap is fully durable.
+    * the ship cursor — ship_pos rides in the manifest, same swap.
+
+  May legally be lost:
+    * the unacked tail — value-log bytes past the last fsync (dropped or
+      torn at a sector boundary; ValueLog.repair_tail truncates them on
+      recovery), unsynced index-WAL records (rebuilt by replay: the apply
+      of index i happens only after index i's vlog bytes were fsynced, so
+      a surviving index record can never point into a lost vlog tail),
+      and un-committed GC/merge outputs (orphans pruned by the manifest).
+
+  Reproduce any sweep point from its {seed, crash_index, mode} record:
+      PYTHONPATH=src python -c "from repro.core.workload import \
+          run_crashpoint; print(run_crashpoint('/tmp/cp', seed=SEED, \
+          crash_index=K, mode=MODE))"
 """
 from __future__ import annotations
 
@@ -75,6 +104,7 @@ import os
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.cache import BlockCache
+from repro.core.faultfs import fs_open, write_json_atomic
 from repro.core.metrics import Metrics
 from repro.core.minilsm import MiniLSM
 from repro.core.raft import LogStoreBase
@@ -102,8 +132,10 @@ class EngineBase(LogStoreBase):
 
     # ------------------------------------------------------ LogStore parts
     def persist_meta(self, term: int, voted_for: Optional[int]):
-        with open(self._meta_path, "w") as f:
-            json.dump({"term": term, "voted_for": voted_for}, f)
+        # raft safety state: a lost term/vote re-grants a vote after
+        # restart, so this must survive kill -9 => full atomic pattern
+        write_json_atomic(self._meta_path,
+                          {"term": term, "voted_for": voted_for})
         self.metrics.on_write("raft_meta", 32)
 
     def load_meta(self) -> Tuple[int, Optional[int]]:
@@ -201,6 +233,7 @@ class OriginalEngine(EngineBase):
 
     def recover(self):
         self.db.recover()
+        self.raft_vlog.repair_tail()   # torn tail = unacked, drop it
         entries, offsets = [], []
         for off, e in self.raft_vlog.scan():
             entries.append(e)
@@ -300,6 +333,8 @@ class DwisckeyEngine(EngineBase):
 
     def recover(self):
         self.db.recover()
+        self.raft_vlog.repair_tail()
+        self.wisc_vlog.repair_tail()
         entries, offsets = [], []
         for off, e in self.raft_vlog.scan():
             entries.append(e)
@@ -403,6 +438,7 @@ class NezhaNoGCEngine(EngineBase):
 
     def recover(self):
         self.active.db.recover()
+        self.active.vlog.repair_tail()
         entries, offsets = [], []
         # header-only: offsets suffice to replay the state machine
         for off, e in self.active.vlog.scan_headers():
@@ -470,6 +506,13 @@ class NezhaEngine(EngineBase):
         self._merge: Optional[dict] = None          # in-flight level merge
         self._last_by_tag: Dict[str, Tuple[int, int]] = {}
         self._boundary: Tuple[int, int] = (0, 0)    # GC snapshot point
+
+    def _write_gc_state(self, st: dict):
+        """gc_state.json is the rotation/flush commit point: it must never
+        be observable half-written or lost after a rename, so it commits
+        through the audited atomic pattern.  Byte accounting stays at the
+        call sites (not every site charged gc_meta historically)."""
+        write_json_atomic(self._state_path, st)
 
     # --------------------------------------------------------- log store
     def _write_module(self) -> StorageModule:
@@ -632,13 +675,12 @@ class NezhaEngine(EngineBase):
         self._building = SortedRun(self.dir, self.metrics,
                                    self.leveled.alloc_rid(), level=0,
                                    cache=self.cache)
-        open(self._building.path, "wb").close()
+        fs_open(self._building.path, "wb").close()
         self._building._started = True
-        with open(self._state_path, "w") as f:
-            json.dump({"started": True, "complete": False, "gen": self.gen,
-                       "rid": self._building.rid,
-                       "last_index": self._boundary[0],
-                       "last_term": self._boundary[1]}, f)
+        self._write_gc_state({"started": True, "complete": False,
+                              "gen": self.gen, "rid": self._building.rid,
+                              "last_index": self._boundary[0],
+                              "last_term": self._boundary[1]})
         self.metrics.on_write("gc_meta", 64)
         self._gc_snapshot_point = self._boundary
         self._gc_iter = None  # built once the boundary has been applied
@@ -695,9 +737,9 @@ class NezhaEngine(EngineBase):
         self._last_by_tag.pop(old_tag, None)
         self.metrics.on_gc_cycle("flush", self._cycle_bytes, 0,
                                  self.gc_count)
-        with open(self._state_path, "w") as f:
-            json.dump({"started": True, "complete": True, "gen": self.gen,
-                       "last_index": li, "last_term": lt}, f)
+        self._write_gc_state({"started": True, "complete": True,
+                              "gen": self.gen, "last_index": li,
+                              "last_term": lt})
         self.metrics.on_write("gc_meta", 64)
         # _gc_allowed: a deposed leader draining its in-flight job must
         # not pay the export read — the shipper would drop it anyway
@@ -721,7 +763,7 @@ class NezhaEngine(EngineBase):
         inputs = self.leveled.level_runs(level)    # newest-first
         out = SortedRun(self.dir, self.metrics, self.leveled.alloc_rid(),
                         level=level + 1, cache=self.cache)
-        open(out.path, "wb").close()
+        fs_open(out.path, "wb").close()
         self._merge = {
             "out": out, "inputs": inputs, "level": level, "bytes": 0,
             "iter": kway_merge_newest_wins([r.items() for r in inputs]),
@@ -830,9 +872,9 @@ class NezhaEngine(EngineBase):
         entries = [old.vlog.read_at(off) for _, off in tail]
         self._last_by_tag.pop(old.tag, None)
         mod, new_offsets = self._build_tail_segment(entries)
-        with open(self._state_path, "w") as f:   # rotation commit point
-            json.dump({"started": False, "complete": True, "gen": self.gen,
-                       "last_index": li, "last_term": lt}, f)
+        self._write_gc_state({"started": False, "complete": True,
+                              "gen": self.gen, "last_index": li,
+                              "last_term": lt})   # rotation commit point
         self.metrics.on_write("gc_meta", 64)
         old.destroy()
         self.active = mod
@@ -919,9 +961,9 @@ class NezhaEngine(EngineBase):
             self.gc_started, self.gc_completed = True, True
             self._gc_last = self.leveled.boundary
             li, lt = self.leveled.boundary
-            with open(self._state_path, "w") as f:
-                json.dump({"started": True, "complete": True, "gen": gen,
-                           "last_index": li, "last_term": lt}, f)
+            self._write_gc_state({"started": True, "complete": True,
+                                  "gen": gen, "last_index": li,
+                                  "last_term": lt})
         elif mid_gc:
             # crashed mid-flush: resume from the interrupt point (§III-E)
             self.active = StorageModule(self.dir, self.metrics,
@@ -973,6 +1015,7 @@ class NezhaEngine(EngineBase):
         entries, offsets = [], []
         mods = [self.active] + ([self.new] if self.new else [])
         for mod in mods:
+            mod.vlog.repair_tail()   # torn tail = unacked by contract
             for off, e in mod.vlog.scan_headers():
                 entries.append(e)
                 offsets.append(off)
@@ -996,10 +1039,9 @@ class NezhaEngine(EngineBase):
                     for e in entries]
             self._last_by_tag.clear()
             self.active, new_offs = self._build_tail_segment(full)
-            with open(self._state_path, "w") as f:
-                json.dump({"started": False, "complete": True,
-                           "gen": self.gen, "last_index": si,
-                           "last_term": st}, f)
+            self._write_gc_state({"started": False, "complete": True,
+                                  "gen": self.gen, "last_index": si,
+                                  "last_term": st})
             self.metrics.on_write("gc_meta", 64)
             old.destroy()
             offsets = [new_offs[e.index] for e in entries]
@@ -1052,9 +1094,9 @@ class NezhaEngine(EngineBase):
         self.active, new_offsets = self._build_tail_segment(entries)
         self.leveled.install_payload(payload, last_index, last_term)
         self._gc_last = max(self._gc_last, (last_index, last_term))
-        with open(self._state_path, "w") as f:
-            json.dump({"started": False, "complete": True, "gen": self.gen,
-                       "last_index": last_index, "last_term": last_term}, f)
+        self._write_gc_state({"started": False, "complete": True,
+                              "gen": self.gen, "last_index": last_index,
+                              "last_term": last_term})
         # deletion comes last: a crash anywhere above leaves the old
         # segment for recovery's orphan purge / below-boundary repair
         old.destroy()

@@ -113,7 +113,8 @@ class LatencyHistogram:
 # counter fields covered by Metrics.snapshot()/delta(): per-category dicts
 # and flat ints.  gc_cycle_log is summarized by length (gc_cycles).
 _SNAP_DICTS = ("write_bytes", "read_bytes", "write_ops", "read_ops",
-               "cache_hits", "ship_bytes", "ship_ops", "read_tiers")
+               "cache_hits", "ship_bytes", "ship_ops", "read_tiers",
+               "fault_injections")
 _SNAP_INTS = ("fsyncs", "bloom_skips", "read_quorum_rounds",
               "follower_serves", "session_stalls")
 
@@ -148,6 +149,12 @@ class Metrics:
     read_quorum_rounds: int = 0
     follower_serves: int = 0
     session_stalls: int = 0
+    # injected-fault evidence (FaultFS / chaos): what this node was
+    # subjected to, by kind ('hard_crash', 'mid_put_crash', ...) — lets
+    # health_report() and the sweep artifacts state exactly how much abuse
+    # a passing run absorbed.
+    fault_injections: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
     latencies_us: Dict[str, List[float]] = field(
         default_factory=lambda: defaultdict(list))
     # leveled-GC evidence: one record per completed GC unit of work —
@@ -185,6 +192,11 @@ class Metrics:
             self.follower_serves += 1
         if stalled:
             self.session_stalls += 1
+
+    def on_fault(self, kind: str):
+        """One injected fault applied to this node (kill -9, torn write,
+        mid-op crash ...)."""
+        self.fault_injections[kind] += 1
 
     def on_read_quorum_round(self):
         """One ReadIndex heartbeat-quorum round (covers every read queued
@@ -286,17 +298,23 @@ class Metrics:
             "read_quorum_rounds": self.read_quorum_rounds,
             "follower_serves": self.follower_serves,
             "session_stalls": self.session_stalls,
+            "fault_injections": dict(self.fault_injections),
             "latency": lat,
         }
 
 
 class Stopwatch:
-    def __init__(self, metrics: Metrics, op: str):
-        self.metrics, self.op = metrics, op
+    """Latency timer; `clock` defaults to wall time but accepts any
+    zero-arg callable returning seconds — the workload harness passes a
+    SimNet-virtual-time clock so recorded latencies are deterministic
+    (immune to container CPU steal)."""
+
+    def __init__(self, metrics: Metrics, op: str, clock=time.perf_counter):
+        self.metrics, self.op, self.clock = metrics, op, clock
 
     def __enter__(self):
-        self.t0 = time.perf_counter()
+        self.t0 = self.clock()
         return self
 
     def __exit__(self, *exc):
-        self.metrics.record_latency(self.op, time.perf_counter() - self.t0)
+        self.metrics.record_latency(self.op, self.clock() - self.t0)

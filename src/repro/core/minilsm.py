@@ -29,6 +29,7 @@ except ImportError:  # container image lacks sortedcontainers
     from repro.core.sorteddict import SortedDict
 
 from repro.core.cache import BlockCache, BloomFilter, next_namespace
+from repro.core.faultfs import fs_fsync, fs_open, fs_remove
 from repro.core.metrics import Metrics
 
 _REC = struct.Struct("<HI")  # key_len, val_len
@@ -75,17 +76,20 @@ class SSTable:
 
     @staticmethod
     def write(path: str, items: List[Tuple[bytes, bytes]], metrics: Metrics,
-              category: str, cache: Optional[BlockCache] = None) -> "SSTable":
-        sst = SSTable(path, metrics, cache)
-        sst.bloom = BloomFilter(len(items))
-        chunks = []
-        lens = []
-        for k, v in items:
-            rec = _REC.pack(len(k), len(v)) + k + v
-            chunks.append(rec)
-            lens.append(len(rec))
-        with open(path, "wb") as f:       # ONE buffered write for the table
+              category: str, cache: Optional[BlockCache] = None,
+              sync: bool = False) -> "SSTable":
+        with fs_open(path, "wb") as f:    # ONE buffered write for the table
+            sst = SSTable(path, metrics, cache)
+            sst.bloom = BloomFilter(len(items))
+            chunks = []
+            lens = []
+            for k, v in items:
+                rec = _REC.pack(len(k), len(v)) + k + v
+                chunks.append(rec)
+                lens.append(len(rec))
             f.write(b"".join(chunks))
+            if sync:   # durable before the WAL that covers it is truncated
+                fs_fsync(f)
         sst._index_records(zip((k for k, _ in items), lens))
         metrics.on_write(category, sst.size)
         return sst
@@ -188,8 +192,7 @@ class SSTable:
             self._f = None
         if self.cache is not None:
             self.cache.invalidate(self._cache_ns)
-        if os.path.exists(self.path):
-            os.remove(self.path)
+        fs_remove(self.path)
 
     def close(self):
         if self._f is not None:
@@ -219,7 +222,7 @@ class MiniLSM:
         self.l1: List[SSTable] = []
         self._sst_seq = 0
         self._wal_path = os.path.join(dirpath, "wal.log")
-        self._wal = open(self._wal_path, "ab") if wal else None
+        self._wal = fs_open(self._wal_path, "ab") if wal else None
         self._wal_dirty = False
         self.compaction_count = 0
 
@@ -268,7 +271,7 @@ class MiniLSM:
             return
         self._wal.flush()
         if self.sync:
-            os.fsync(self._wal.fileno())
+            fs_fsync(self._wal)
             self.metrics.on_fsync()
         self._wal_dirty = False
 
@@ -287,7 +290,8 @@ class MiniLSM:
         path = os.path.join(self.dir, f"sst_{self._sst_seq:06d}.sst")
         self._sst_seq += 1
         self.l0.append(SSTable.write(path, list(self.mem.items()),
-                                     self.metrics, "flush", self.cache))
+                                     self.metrics, "flush", self.cache,
+                                     sync=self.sync))
         self.mem.clear()
         self.mem_bytes = 0
         self._truncate_wal()
@@ -305,7 +309,7 @@ class MiniLSM:
         path = os.path.join(self.dir, f"sst_{self._sst_seq:06d}.sst")
         self._sst_seq += 1
         new_l1 = SSTable.write(path, list(merged.items()), self.metrics,
-                               "compaction", self.cache)
+                               "compaction", self.cache, sync=self.sync)
         for sst in self.l0 + self.l1:
             sst.delete()
         self.l0, self.l1 = [], [new_l1]
@@ -373,6 +377,11 @@ class MiniLSM:
                 self.mem_bytes += klen + vlen
                 off += _REC.size + klen + vlen
                 n += 1
+            if off < len(buf):
+                # cut the torn tail NOW: post-restart appends land after it
+                # on the "ab" handle, and a later replay would stop here and
+                # silently lose them
+                self._wal.truncate(off)
         return n
 
     def total_disk_bytes(self) -> int:
@@ -388,5 +397,4 @@ class MiniLSM:
         self.close()
         for sst in self.l0 + self.l1:
             sst.delete()
-        if os.path.exists(self._wal_path):
-            os.remove(self._wal_path)
+        fs_remove(self._wal_path)

@@ -29,6 +29,14 @@ Read path (client.py's consistency tiers ride on these primitives):
     RequestVote within min(election_timeout) of valid leader traffic
     (§9.6), so the followers renewing a lease can never simultaneously
     form the majority that elects the leader's replacement.
+
+Durability contract (see engines.py for the full statement): this module
+itself performs no file I/O — everything durable flows through the log
+store.  The two commitments Raft relies on are (a) `commit_window()` is
+called before any ack/commit ("durable before ack" below), so an acked
+entry is on disk at every crash point the FaultFS sweep can inject, and
+(b) `persist_meta()` lands term/vote atomically, so kill -9 can never
+resurrect a pre-vote term and double-grant a vote.
 """
 from __future__ import annotations
 

@@ -28,6 +28,13 @@ Protocol (ShipRun / ShipRunReply in raft.py):
     epoch the leader already trimmed, crashed mid-sequence, was mid-local-GC
     as a deposed leader) answers `resync` and the leader falls back to
     InstallSnapshot-style catch-up — never divergence.
+
+Durability: this module keeps NO durable state of its own.  In-flight
+chunk assemblies are volatile by design — kill -9 anywhere (the FaultFS
+crash-point sweep injects mid-adoption crashes) loses at most the record
+in flight, which the leader retransmits from ship_pos; the one durable
+cursor is LeveledStore.ship_pos, committed inside the adoption's atomic
+manifest swap (see the durability contract in engines.py).
 """
 from __future__ import annotations
 

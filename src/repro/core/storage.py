@@ -28,6 +28,8 @@ from bisect import bisect_left, bisect_right
 from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core.cache import BlockCache, BloomFilter, next_namespace
+from repro.core.faultfs import (fs_fsync, fs_fsync_path, fs_open, fs_remove,
+                                write_json_atomic)
 from repro.core.metrics import Metrics
 from repro.core.minilsm import MiniLSM
 from repro.core.valuelog import KIND_PUT, LogEntry, ValueLog, _HDR
@@ -178,7 +180,7 @@ class SortedStore:
               last_index: int, last_term: int):
         """One-shot build: write key-ascending entries and seal."""
         self._reset_read_state()
-        open(self.path, "wb").close()    # fresh file
+        fs_open(self.path, "wb").close()    # fresh file
         self.index.clear()
         self.keys = []
         self.append_items(items, "gc_sorted")
@@ -189,7 +191,7 @@ class SortedStore:
         maintaining index/keys.  Returns bytes written.  Shared by the GC
         flush and level-merge paths so framing + accounting can't drift."""
         written = 0
-        with open(self.path, "ab") as f:
+        with fs_open(self.path, "ab") as f:
             off = f.tell()
             for key, entry in items:
                 data = entry.encode()
@@ -202,14 +204,18 @@ class SortedStore:
         return written
 
     def seal(self, last_index: int, last_term: int):
-        """Mark the run complete: Raft boundary + bloom + durable meta."""
+        """Mark the run complete: Raft boundary + bloom + durable meta.
+        The data file is fsynced BEFORE the meta commits — a meta that says
+        `complete` over a torn data file would survive kill -9 otherwise."""
         self.last_index = last_index
         self.last_term = last_term
         self.bloom = BloomFilter.from_keys(self.keys)
         self._complete = True
-        with open(self.meta_path, "w") as f:
-            json.dump({"last_index": last_index, "last_term": last_term,
-                       "complete": True}, f)
+        if os.path.exists(self.path):
+            fs_fsync_path(self.path)
+        write_json_atomic(self.meta_path,
+                          {"last_index": last_index, "last_term": last_term,
+                           "complete": True})
         self.metrics.on_write("gc_meta", 64)
 
     def last_key_on_disk(self) -> Optional[bytes]:
@@ -243,7 +249,7 @@ class SortedStore:
             pass  # corrupt tail: everything before it is still good
         if os.path.exists(self.path) and \
                 os.path.getsize(self.path) > valid_end:
-            with open(self.path, "r+b") as f:
+            with fs_open(self.path, "r+b") as f:
                 f.truncate(valid_end)
         self._started = last is not None
         return last
@@ -348,12 +354,13 @@ class SortedStore:
     def install_payload(self, payload: bytes, last_index: int,
                         last_term: int, category: str = "snapshot_install"):
         self._reset_read_state()
-        with open(self.path, "wb") as f:
+        with fs_open(self.path, "wb") as f:
             f.write(payload)
+            fs_fsync(f)   # data durable before the meta declares `complete`
         self.metrics.on_write(category, len(payload))
-        with open(self.meta_path, "w") as f:
-            json.dump({"last_index": last_index, "last_term": last_term,
-                       "complete": True}, f)
+        write_json_atomic(self.meta_path,
+                          {"last_index": last_index, "last_term": last_term,
+                           "complete": True})
         self.load()
 
     def data_bytes(self) -> int:
@@ -367,8 +374,7 @@ class SortedStore:
     def destroy(self):
         self._reset_read_state()
         for p in (self.path, self.meta_path):
-            if os.path.exists(p):
-                os.remove(p)
+            fs_remove(p)
 
 
 class SortedRun(SortedStore):
@@ -459,7 +465,6 @@ class LeveledStore:
 
     # ----------------------------------------------------------- manifest
     def _persist_manifest(self):
-        tmp = self.manifest_path + ".tmp"
         data = {"next_rid": self.next_rid,
                 "boundary": list(self.boundary),
                 "epoch": self.epoch,
@@ -467,9 +472,10 @@ class LeveledStore:
                 "runs": [{"rid": r.rid, "level": r.level,
                           "last_index": r.last_index,
                           "last_term": r.last_term} for r in self.runs]}
-        with open(tmp, "w") as f:
-            json.dump(data, f)
-        os.replace(tmp, self.manifest_path)   # atomic swap
+        # audited atomic swap: tmp fsync + rename + parent dirsync — callers
+        # delete retired run files only after this returns, so a lost rename
+        # can never leave the old manifest pointing at removed files
+        write_json_atomic(self.manifest_path, data)
         self.metrics.on_write("gc_meta", 64)
 
     def alloc_rid(self) -> int:
@@ -509,7 +515,7 @@ class LeveledStore:
         for fn in os.listdir(self.dir):
             if fn.startswith("run_") and fn.split(".")[-1] in ("log", "meta") \
                     and fn not in live:
-                os.remove(os.path.join(self.dir, fn))
+                fs_remove(os.path.join(self.dir, fn))
 
     # ------------------------------------------------------------ mutation
     def add_l0(self, run: SortedRun, boundary: Tuple[int, int]):
@@ -659,5 +665,4 @@ class LeveledStore:
         for r in self.runs:
             r.destroy()
         self.runs = []
-        if os.path.exists(self.manifest_path):
-            os.remove(self.manifest_path)
+        fs_remove(self.manifest_path)

@@ -16,6 +16,7 @@ from dataclasses import dataclass
 from typing import Iterator, List, Optional, Tuple
 
 from repro.core.cache import BlockCache, next_namespace
+from repro.core.faultfs import fs_fsync, fs_open, fs_remove
 from repro.core.metrics import Metrics
 
 _HDR = struct.Struct("<IIQBHI")
@@ -63,7 +64,7 @@ class ValueLog:
         self._cache_ns = next_namespace()
         self._dirty = False
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        self._f = open(path, "ab+")
+        self._f = fs_open(path, "ab+")
         self._f.seek(0, os.SEEK_END)
         self._size = self._f.tell()
 
@@ -107,7 +108,7 @@ class ValueLog:
             return
         self._f.flush()
         if self.sync:
-            os.fsync(self._f.fileno())
+            fs_fsync(self._f)
             self.metrics.on_fsync()
         self._dirty = False
 
@@ -175,6 +176,34 @@ class ValueLog:
                 yield off, e
                 off += _HDR.size + klen + vlen
 
+    def repair_tail(self) -> int:
+        """Crash hygiene: drop torn/corrupt trailing bytes.  Must run before
+        any recovery scan — scan()/scan_headers() assert on magic.  Safe by
+        the durability contract: with sync=True every acked entry was
+        fsynced before the ack, so a torn tail is by construction unacked.
+        Returns the number of bytes dropped."""
+        self._f.flush()
+        size = os.path.getsize(self.path)
+        end = 0
+        with open(self.path, "rb") as f:
+            while True:
+                hdr = f.read(_HDR.size)
+                if len(hdr) < _HDR.size:
+                    break
+                magic, _, _, _, klen, vlen = _HDR.unpack(hdr)
+                if magic != MAGIC:
+                    break
+                if end + _HDR.size + klen + vlen > size:
+                    break
+                f.seek(klen + vlen, os.SEEK_CUR)
+                end += _HDR.size + klen + vlen
+        dropped = size - end
+        if dropped:
+            self.truncate_to(end)
+        else:
+            self._size = size
+        return dropped
+
     @property
     def size(self) -> int:
         return self._size
@@ -200,5 +229,4 @@ class ValueLog:
         self.close()
         if self.cache is not None:
             self.cache.invalidate(self._cache_ns)
-        if os.path.exists(self.path):
-            os.remove(self.path)
+        fs_remove(self.path)

@@ -31,6 +31,17 @@ the stalls happen on purpose:
     net-wide `drop_prob` lossy windows, GC storms (forced flush+merge
     cycles) — fired at op-index points so the timeline is replayable
     from {seed, schedule} alone (recorded into every report/artifact).
+  * Crash-point probes: run_crashpoint() replays a seeded single-node
+    workload under an installed FaultFS (repro.core.faultfs), applies
+    kill -9 semantics at I/O op k (drop / torn / lost_rename), recovers
+    the node from its durable view and audits for acked-write loss plus
+    manifest/run-set/raft-log integrity; run_full_restart() does the
+    same to ALL n nodes at once (fleet power loss) and additionally
+    requires byte-equal engine scans after restart.  Three chaos actions
+    (kill_leader_mid_put, crash_mid_gc, crash_mid_adoption) arm the same
+    shim MID-operation, so the op loop treats an escaping
+    SimulatedCrash as a node death — hard-crash + ack-ambiguity
+    resolution — never as a harness error.
   * check_history(): every run's history is checked for linearizability
     violations (a LINEARIZABLE/LEASE read must return the latest acked
     write — a sequential client makes this exact, not heuristic) and for
@@ -40,18 +51,24 @@ the stalls happen on purpose:
 
 Determinism: every decision that touches the cluster (op kinds, keys,
 values, fault points, fault targets) derives from the spec/schedule seeds
-and the cluster's own seeded RNGs; wall-clock only feeds the histograms.
+and the cluster's own seeded RNGs; wall-clock only feeds the histograms
+— and WorkloadSpec(virtual_time=True) removes even that: service times
+are measured in SimNet ticks * tick_us, so tail quantiles are themselves
+deterministic and immune to CPU steal on a loaded host.
 Same seeds => identical fault timeline AND identical SimNet delivery
 order (tests/test_chaos_harness.py pins both).
 """
 from __future__ import annotations
 
+import os
 import random
 from dataclasses import asdict, dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.core import faultfs
 from repro.core.client import (LEASE, LINEARIZABLE, SESSION, Session,
                                StaleReadError)
+from repro.core.faultfs import SimulatedCrash
 from repro.core.metrics import LatencyHistogram
 
 # ---------------------------------------------------------------- workloads
@@ -96,6 +113,10 @@ class WorkloadSpec:
     scan_span: int = 20        # keys per scan
     seed: int = 0
     tenants: Tuple[Tenant, ...] = (Tenant(),)
+    # virtual_time: service times come from SimNet ticks (tick_us each)
+    # instead of perf_counter — fully deterministic tail quantiles
+    virtual_time: bool = False
+    tick_us: float = 50.0
 
     def record(self) -> dict:
         d = asdict(self)
@@ -139,8 +160,17 @@ def zipf_key_indices(n_ops: int, n_keys: int, theta: float, seed: int):
 #   lossy            net-wide drop_prob window (arg = probability)
 #   heal_lossy       end the lossy window
 #   gc_storm         force a flush + cascading merges on the leader NOW
+# Crash-DURING-op actions (need an installed FaultFS; they degrade to the
+# nearest polite fault without one):
+#   kill_leader_mid_put   arm the leader's value log: the next vlog write
+#                         dies mid-put with kill -9 semantics
+#   crash_mid_gc          arm the leader's run files (torn) and force a GC
+#                         cycle — it dies inside the build/seal/swap window
+#   crash_mid_adoption    arm a follower's run files (torn) and tick until
+#                         an adoption record lands mid-install
 ACTIONS = ("kill_leader", "restart", "isolate_leader", "partition_link",
-           "heal", "lossy", "heal_lossy", "gc_storm")
+           "heal", "lossy", "heal_lossy", "gc_storm",
+           "kill_leader_mid_put", "crash_mid_gc", "crash_mid_adoption")
 
 
 @dataclass
@@ -249,7 +279,9 @@ class _ChaosRunner:
             return nid
         if ev.action == "restart":
             nid = self.killed.pop() if self.killed else None
-            if nid is not None:
+            # mid-op crashes can race a scheduled kill: only revive a node
+            # that is actually down
+            if nid is not None and c.nodes[nid] is None:
                 c.restart(nid)
             return nid
         if ev.action == "isolate_leader":
@@ -271,7 +303,66 @@ class _ChaosRunner:
             return None
         if ev.action == "gc_storm":
             return c.force_gc()
+        if ev.action == "kill_leader_mid_put":
+            fs = faultfs.active()
+            ld = c.elect()
+            if fs is None:                  # no shim: degrade to a polite kill
+                c.crash(ld.nid)
+                self.killed.append(ld.nid)
+                return ld.nid
+            # the crash itself fires later, inside whatever put next appends
+            # to the leader's value log; the op loop routes it to
+            # on_hard_crash so a scheduled 'restart' can still revive it
+            fs.arm(0, scope=os.path.join(c._engine_dir(ld.nid), "valuelog"),
+                   mode="drop")
+            return ld.nid
+        if ev.action == "crash_mid_gc":
+            fs = faultfs.active()
+            if fs is None:
+                return c.force_gc()         # degrade to a plain gc_storm
+            ld = c.elect()
+            # a couple of ops into the run build: inside the build+seal
+            # window, before the manifest swap commits the outputs
+            fs.arm(int(ev.arg) if ev.arg else 2,
+                   scope=os.path.join(c._engine_dir(ld.nid), "run"),
+                   mode="torn")
+            try:
+                c.force_gc()
+            except SimulatedCrash as e:
+                return self.on_hard_crash(c.hard_crash_from(e))
+            fs.disarm()                     # GC never touched a run file
+            return None
+        if ev.action == "crash_mid_adoption":
+            fs = faultfs.active()
+            ld = c.elect()
+            followers = [i for i in range(c.n)
+                         if i != ld.nid and c.nodes[i] is not None
+                         and i not in c.net.down]
+            if fs is None or not followers:
+                return None
+            fid = followers[0]
+            # 'run' also prefixes runs_manifest.json: the crash can land on
+            # the adopted run's bytes OR on the manifest swap adopting it
+            fs.arm(0, scope=os.path.join(c._engine_dir(fid), "run"),
+                   mode="torn")
+            try:
+                c.force_gc()                # seal a run => a ship record
+                for _ in range(600):
+                    if not fs.armed:
+                        break
+                    c.tick()
+            except SimulatedCrash as e:
+                return self.on_hard_crash(c.hard_crash_from(e))
+            fs.disarm()                     # nothing shipped in the budget
+            return None
         raise AssertionError(ev.action)
+
+    def on_hard_crash(self, nid: Optional[int]) -> Optional[int]:
+        """A mid-op SimulatedCrash killed `nid`: remember it so a later
+        'restart' event revives it like any scheduled kill."""
+        if nid is not None:
+            self.killed.append(nid)
+        return nid
 
 
 # ----------------------------------------------------------------- history
@@ -445,6 +536,15 @@ def run_workload(cluster, spec: WorkloadSpec,
     docstring for the latency model."""
     import time as _time
 
+    if spec.virtual_time:
+        # the SimNet tick counter is the clock: an op's service time is
+        # the ticks it consumed * tick_us, a pure function of the seeds —
+        # p99 gates stop depending on how loaded the host CPU is
+        def now() -> float:
+            return cluster.net.time * spec.tick_us * 1e-6
+    else:
+        now = _time.perf_counter
+
     rng = random.Random(f"workload:{spec.seed}")
     arr_rng = random.Random(f"arrivals:{spec.seed}")
     zipf = zipf_key_indices(spec.n_ops, spec.n_keys, spec.zipf_theta,
@@ -459,19 +559,37 @@ def run_workload(cluster, spec: WorkloadSpec,
     wseq = 0
     n_inserted = 0
 
+    def on_crash(e: SimulatedCrash) -> Optional[int]:
+        """A SimulatedCrash escaping an op is a node death, not a harness
+        error: hard-crash the node whose I/O tripped it and tell the
+        chaos runner so a later 'restart' event can revive it."""
+        nid = cluster.hard_crash_from(e)
+        if runner is not None:
+            runner.on_hard_crash(nid)
+        return nid
+
     def do_put(key: bytes, tier: str, sid: int) -> float:
         nonlocal wseq
         val = _value(key, wseq, spec.vsize)
         wseq += 1
-        t0 = _time.perf_counter()
-        if sid >= 0:
-            idx = sessions[sid].put(key, val)
-        else:
-            idx = cluster.put(key, val)
-        dt = _time.perf_counter() - t0
+        t0 = now()
+        try:
+            if sid >= 0:
+                idx = sessions[sid].put(key, val)
+            else:
+                idx = cluster.put(key, val)
+        except SimulatedCrash as e:
+            on_crash(e)
+            # ack ambiguity: the crash may sit between quorum commit and
+            # the client ack.  Ask the surviving majority what it kept and
+            # record the write only if it landed — with no session floor,
+            # because the session never saw an ack.
+            if cluster.get(key, LINEARIZABLE) == val:
+                history.append(OpRecord("put", key, val, tier))
+            return now() - t0
         history.append(OpRecord("put", key, val, tier, index=idx,
                                 session=sid))
-        return dt
+        return now() - t0
 
     # ---- preload: the keyspace every read/scan starts from -------------
     if preload:
@@ -555,7 +673,7 @@ def run_workload(cluster, spec: WorkloadSpec,
             label = f"{label_base}scan:{ten.tier}"
             lo = _key(ki)
             hi = _key(ki + spec.scan_span)
-            t0 = _time.perf_counter()
+            t0 = now()
             try:
                 if sid >= 0:
                     got = sessions[sid].scan(lo, hi)
@@ -565,10 +683,12 @@ def run_workload(cluster, spec: WorkloadSpec,
                                         session=sid, lo=lo, hi=hi))
             except StaleReadError:
                 refused[label] = refused.get(label, 0) + 1
-            dt = _time.perf_counter() - t0
+            except SimulatedCrash as e:
+                on_crash(e)          # unacked read: nothing to record
+            dt = now() - t0
         elif r < mix["write"] + mix["scan"] + mix["rmw"]:
             label = f"{label_base}rmw:{ten.tier}"
-            t0 = _time.perf_counter()
+            t0 = now()
             try:
                 if sid >= 0:
                     got = sessions[sid].get(_key(ki))
@@ -578,11 +698,13 @@ def run_workload(cluster, spec: WorkloadSpec,
                                         session=sid))
             except StaleReadError:
                 refused[label] = refused.get(label, 0) + 1
+            except SimulatedCrash as e:
+                on_crash(e)
             do_put(_key(ki), ten.tier, sid)
-            dt = _time.perf_counter() - t0
+            dt = now() - t0
         else:
             label = f"{label_base}get:{ten.tier}"
-            t0 = _time.perf_counter()
+            t0 = now()
             try:
                 if sid >= 0:
                     got = sessions[sid].get(_key(ki))
@@ -592,7 +714,9 @@ def run_workload(cluster, spec: WorkloadSpec,
                                         session=sid))
             except StaleReadError:
                 refused[label] = refused.get(label, 0) + 1
-            dt = _time.perf_counter() - t0
+            except SimulatedCrash as e:
+                on_crash(e)
+            dt = now() - t0
         samples.append((i, label, dt))
         phase_of_op.append(cur_phase)
     if runner is not None:
@@ -618,6 +742,9 @@ def run_workload(cluster, spec: WorkloadSpec,
     violations: List[str] = []
     if check:
         if final_scan_check:
+            fs = faultfs.active()
+            if fs is not None and fs.armed:
+                fs.disarm()          # an armed-but-unfired mid-op fault
             # end-state audit: one linearizable scan of the whole keyspace
             # must equal the checker's expected map — a write lost during
             # chaos that no per-op read happened to cover still shows here
@@ -637,3 +764,236 @@ def run_workload(cluster, spec: WorkloadSpec,
         offered_rate=spec.rate,
         achieved_rate=(len(samples) / duration) if duration else 0.0,
         duration_s=duration)
+
+
+# ------------------------------------------------------- crash-point sweeps
+# The seeded probe workload every crash-point sweep records and replays:
+# small on purpose — the sweep domain is EVERY numbered I/O op the run
+# issues, so op count, not op variety, is the knob.
+CRASHPOINT_OPS = 18
+CRASHPOINT_KEYS = 6
+CRASHPOINT_VSIZE = 96
+LIVENESS_KEY = _key(10 ** 6)     # outside every audit scan range
+
+
+def _crashpoint_put_stream(n_ops: int) -> Iterator[Tuple[int, bytes, bytes]]:
+    """The deterministic acked-write stream: op j overwrites key j%K with
+    a value stamped by j, so 'latest value per key' is a pure function of
+    how far the run got before the crash."""
+    for j in range(n_ops):
+        key = _key(j % CRASHPOINT_KEYS)
+        yield j, key, _value(key, j, CRASHPOINT_VSIZE)
+
+
+def _audit_cluster(cluster) -> List[str]:
+    """Structural durability audit, beyond what client reads can see:
+    raft log shape (offsets paired with entries, non-decreasing terms,
+    commit inside the log), and manifest/run-set agreement (every
+    manifest run exists on disk, is at least as long as its index says,
+    and the manifest boundary covers the newest run)."""
+    probs: List[str] = []
+    for i, nd in enumerate(cluster.nodes):
+        if nd is None:
+            continue
+        if len(nd.offsets) != len(nd.entries):
+            probs.append(f"node{i}: {len(nd.offsets)} offsets for "
+                         f"{len(nd.entries)} log entries")
+        terms = [e.term for e in nd.entries]
+        if any(a > b for a, b in zip(terms, terms[1:])):
+            probs.append(f"node{i}: raft log terms decrease")
+        if nd.commit_index > nd.snap_index + len(nd.entries):
+            probs.append(f"node{i}: commit_index {nd.commit_index} past "
+                         f"log end {nd.snap_index + len(nd.entries)}")
+        lvl = getattr(cluster.engines[i], "leveled", None)
+        if lvl is None:
+            continue
+        for r in lvl.runs:
+            if not os.path.exists(r.path):
+                probs.append(f"node{i}: manifest names missing run file "
+                             f"{os.path.basename(r.path)}")
+                continue
+            need = max((off + ln for off, ln in r.index.values()), default=0)
+            size = os.path.getsize(r.path)
+            if size < need:
+                probs.append(f"node{i}: run {os.path.basename(r.path)} is "
+                             f"{size}B, its index needs {need}B")
+        if lvl.runs:
+            newest = max(r.last_index for r in lvl.runs)
+            if lvl.boundary[0] < newest:
+                probs.append(f"node{i}: manifest boundary {lvl.boundary[0]}"
+                             f" behind newest run {newest}")
+    return probs
+
+
+def _close_engines(cluster):
+    if cluster is not None:
+        for e in cluster.engines:
+            if e is not None:
+                e.close()
+
+
+def _verify_recovery(target, acked) -> Tuple[List[str], List[str]]:
+    """acked-write-loss check (check_history over the acked stream + one
+    linearizable full-range scan) + the structural audit."""
+    history = [OpRecord("put", k, v) for k, v in acked]
+    lo, hi = _key(0), _key(CRASHPOINT_KEYS + 10)
+    got = target.scan(lo, hi, LINEARIZABLE)
+    history.append(OpRecord("scan", value=got, tier=LINEARIZABLE,
+                            lo=lo, hi=hi))
+    return check_history(history), _audit_cluster(target)
+
+
+def run_crashpoint(workdir: str, seed: int = 0,
+                   crash_index: Optional[int] = None, mode: str = "drop",
+                   n_ops: int = CRASHPOINT_OPS, engine: str = "nezha",
+                   gc_every: int = 6) -> dict:
+    """One crash-point probe: run the seeded single-node workload with a
+    FaultFS installed, kill -9 the node at I/O op `crash_index` (None =
+    record run: never crash, just count the ops — the sweep domain),
+    recover from the durable view, and audit.
+
+    The gate is result["recovered_ok"]: no acked write lost (check_history
+    over the acked stream + a final linearizable scan) and a clean
+    structural audit.  Any sweep failure reproduces from
+    run_crashpoint(dir, seed=SEED, crash_index=K, mode=MODE) alone."""
+    from repro.core.cluster import Cluster
+    from repro.core.faultfs import FaultFS, install, uninstall
+
+    fs = FaultFS(seed=seed)
+    install(fs)
+    cluster = rec = None
+    acked: List[Tuple[bytes, bytes]] = []
+    inflight = crash = None
+    try:
+        # armed BEFORE construction: cluster bring-up I/O is part of the
+        # numbered op stream, so crash indices align with the record run
+        if crash_index is not None:
+            fs.arm(crash_index, scope=os.path.abspath(workdir) + os.sep,
+                   mode=mode)
+        try:
+            cluster = Cluster(n=1, engine=engine, workdir=workdir,
+                              seed=seed, sync=True,
+                              engine_kwargs={"gc_threshold": 2048}
+                              if engine == "nezha" else None)
+            cluster.elect()
+            for j, key, val in _crashpoint_put_stream(n_ops):
+                inflight = (key, val)
+                cluster.put(key, val)
+                acked.append((key, val))
+                inflight = None
+                if (j + 1) % gc_every == 0:
+                    cluster.force_gc()
+        except SimulatedCrash as e:
+            crash = e
+        result = {"seed": seed, "mode": mode, "crash_index": crash_index,
+                  "ops": fs.op_count, "acked": len(acked),
+                  "crashed": crash is not None, "crash": None}
+        if crash is None:
+            fs.disarm()
+            target = cluster
+        else:
+            result["crash"] = {"op_index": crash.op_index,
+                               "kind": crash.kind,
+                               "path": os.path.basename(crash.path)}
+            # kill -9: abandon the cluster un-closed, settle the directory
+            # to its durable view, then boot a recovery cluster from it
+            fs.materialize(os.path.abspath(workdir) + os.sep)
+            rec = Cluster(n=1, engine=engine, workdir=workdir,
+                          seed=seed + 1, sync=True,
+                          engine_kwargs={"gc_threshold": 2048}
+                          if engine == "nezha" else None,
+                          recover=True)
+            rec.elect()
+            # liveness probe; also the new-term entry Raft needs before it
+            # may commit any surviving old-term tail
+            rec.put(LIVENESS_KEY, b"alive")
+            if inflight is not None and \
+                    rec.get(inflight[0], LINEARIZABLE) == inflight[1]:
+                # ack ambiguity: the in-flight write counts as acked iff
+                # the recovered node kept it
+                acked.append(inflight)
+            target = rec
+        result["violations"], result["audit"] = _verify_recovery(target,
+                                                                 acked)
+        result["faults"] = fs.counters()
+        result["recovered_ok"] = not result["violations"] and \
+            not result["audit"]
+        return result
+    finally:
+        uninstall()
+        # the crashed cluster's handles were closed by materialize();
+        # whichever cluster survived closes politely
+        _close_engines(rec)
+        if crash is None:
+            _close_engines(cluster)
+
+
+def run_full_restart(workdir: str, seed: int = 0, crash_index: int = 60,
+                     mode: str = "torn", n: int = 3, engine: str = "nezha",
+                     n_ops: int = 24) -> dict:
+    """Fleet power loss: kill ALL n nodes at a (possibly torn) I/O point,
+    restart every node from its durable view, and require (a) no acked
+    write lost and (b) byte-equal engine scans on every node once the
+    applies settle."""
+    from repro.core.cluster import Cluster
+    from repro.core.faultfs import FaultFS, install, uninstall
+
+    fs = FaultFS(seed=seed)
+    install(fs)
+    cluster = rec = None
+    try:
+        fs.arm(crash_index, scope=os.path.abspath(workdir) + os.sep,
+               mode=mode)
+        acked: List[Tuple[bytes, bytes]] = []
+        inflight = crash = None
+        try:
+            cluster = Cluster(n=n, engine=engine, workdir=workdir,
+                              seed=seed, sync=True,
+                              engine_kwargs={"gc_threshold": 4096})
+            cluster.elect()
+            for j, key, val in _crashpoint_put_stream(n_ops):
+                inflight = (key, val)
+                cluster.put(key, val)
+                acked.append((key, val))
+                inflight = None
+                if (j + 1) % 8 == 0:
+                    cluster.force_gc()
+                    cluster.drain_shipping(2000)
+        except SimulatedCrash as e:
+            crash = e
+        if crash is None:
+            fs.disarm()
+        # every node dies at the same instant: one materialize over the
+        # whole workdir, no goodbye flush anywhere
+        changed = fs.materialize(os.path.abspath(workdir) + os.sep)
+        rec = Cluster(n=n, engine=engine, workdir=workdir, seed=seed + 1,
+                      sync=True, engine_kwargs={"gc_threshold": 4096},
+                      recover=True)
+        rec.elect()
+        rec.put(LIVENESS_KEY, b"alive")
+        if inflight is not None and \
+                rec.get(inflight[0], LINEARIZABLE) == inflight[1]:
+            acked.append(inflight)
+        for _ in range(6000):               # settle applies on every node
+            ld = rec.leader()
+            if ld is not None and all(
+                    nd is not None and nd.last_applied >= ld.commit_index
+                    for nd in rec.nodes):
+                break
+            rec.tick()
+        violations, audit = _verify_recovery(rec, acked)
+        lo, hi = _key(0), _key(CRASHPOINT_KEYS + 10)
+        scans = [e.scan(lo, hi) for e in rec.engines if e is not None]
+        converged = bool(scans) and all(s == scans[0] for s in scans[1:])
+        return {"seed": seed, "mode": mode, "crash_index": crash_index,
+                "crashed": crash is not None,
+                "crash": None if crash is None else
+                {"op_index": crash.op_index, "kind": crash.kind,
+                 "path": os.path.basename(crash.path)},
+                "acked": len(acked), "files_settled": changed,
+                "violations": violations, "audit": audit,
+                "converged": converged, "faults": fs.counters(),
+                "recovered_ok": converged and not violations and not audit}
+    finally:
+        uninstall()
+        _close_engines(rec)

@@ -1,0 +1,348 @@
+"""Crash-point fault injection: kill -9 at EVERY numbered I/O op.
+
+Load-bearing claims under test:
+
+  * FaultFS semantics: unsynced buffered bytes vanish (drop), a
+    deterministic sector-aligned prefix of the unsynced tail may survive
+    (torn), and an os.replace whose parent directory was never fsynced
+    can be lost (lost_rename); everything fsynced stays.  SimulatedCrash
+    is a BaseException so a stray `except Exception` in a recovery helper
+    cannot swallow a kill -9.
+  * write_json_atomic is all-or-nothing at every crash index and in every
+    mode: the destination is byte-equal to the old OR the new document,
+    never empty, torn, or unparsable.
+  * the exhaustive sweep: the seeded single-node workload is killed at
+    every I/O op index under all three modes, recovered, and must lose no
+    acked write (check_history) and keep manifest/run-set/raft-log
+    integrity (_audit_cluster).  `CRASHPOINT_N_OPS=48 make crash` widens
+    the workload for a longer sweep; the tier-1 default is exhaustive at
+    smoke scale.
+  * full-cluster restart: ALL n nodes die at the same torn I/O point
+    (fleet power loss) and must converge byte-equal with no acked loss.
+  * mid-op chaos: kill_leader_mid_put / crash_mid_gc / crash_mid_adoption
+    kill nodes INSIDE a put / GC cycle / run adoption, and the workload
+    checker still reports zero violations.
+
+Every failure reproduces from {seed, crash_index, mode} alone — the
+assertion messages carry the exact run_crashpoint() call to paste.
+"""
+import os
+
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.faultfs import (MODES, FaultFS, SimulatedCrash, fs_fsync,
+                                fs_open, install, uninstall,
+                                write_json_atomic)
+from repro.core.workload import (ChaosSchedule, FaultEvent, WorkloadSpec,
+                                 run_crashpoint, run_full_restart,
+                                 run_workload)
+
+SWEEP_N_OPS = int(os.environ.get("CRASHPOINT_N_OPS", "18"))
+
+
+@pytest.fixture
+def fs():
+    f = install(FaultFS(seed=1))
+    yield f
+    uninstall()
+
+
+# ------------------------------------------------------- shim semantics
+def test_unsynced_bytes_drop(fs, tmp_path):
+    p = str(tmp_path / "seg.log")
+    f = fs_open(p, "wb")
+    f.write(b"A" * 100)
+    fs_fsync(f)
+    f.write(b"B" * 100)            # never synced: gone at the crash
+    fs.materialize(str(tmp_path) + os.sep)
+    with open(p, "rb") as r:
+        assert r.read() == b"A" * 100
+    assert fs.injected["dropped_bytes"] == 100
+
+
+def test_unsynced_new_file_never_existed(fs, tmp_path):
+    p = str(tmp_path / "fresh.log")
+    f = fs_open(p, "wb")
+    f.write(b"data")
+    fs.materialize(str(tmp_path) + os.sep)
+    assert not os.path.exists(p)
+
+
+def test_torn_tail_sector_aligned_and_deterministic(tmp_path):
+    def run(sub):
+        f = install(FaultFS(seed=33, sector=128))
+        try:
+            d = tmp_path / sub
+            d.mkdir()
+            p = str(d / "seg.log")
+            h = fs_open(p, "wb")
+            h.write(b"S" * 64)
+            fs_fsync(h)
+            h.write(b"U" * 1000)   # unsynced tail: torn at the crash
+            f.materialize(str(d) + os.sep, mode="torn")
+            with open(p, "rb") as r:
+                return r.read()
+        finally:
+            uninstall()
+
+    a, b = run("a"), run("b")
+    assert a == b                  # pure function of {seed, op index, mode}
+    assert a[:64] == b"S" * 64     # synced prefix always survives
+    extra = len(a) - 64
+    assert extra % 128 == 0 or extra == 1000
+
+
+def test_lost_rename_undone_without_dirsync(fs, tmp_path):
+    dst, tmp = str(tmp_path / "meta.json"), str(tmp_path / "meta.json.tmp")
+    h = fs_open(dst, "wb")
+    h.write(b"v1")
+    fs_fsync(h)
+    h.close()
+    h = fs_open(tmp, "wb")
+    h.write(b"v2")
+    fs_fsync(h)
+    h.close()
+    fs.replace(tmp, dst)           # rename, but the dir entry never synced
+    fs.materialize(str(tmp_path) + os.sep, mode="lost_rename")
+    with open(dst, "rb") as r:
+        assert r.read() == b"v1"   # dst reverted
+    with open(tmp, "rb") as r:
+        assert r.read() == b"v2"   # src reappeared with its durable bytes
+    assert fs.injected["lost_renames"] == 1
+
+
+def test_dirsync_pins_the_rename(fs, tmp_path):
+    dst, tmp = str(tmp_path / "meta.json"), str(tmp_path / "meta.json.tmp")
+    h = fs_open(tmp, "wb")
+    h.write(b"v2")
+    fs_fsync(h)
+    h.close()
+    fs.replace(tmp, dst)
+    fs.dirsync(str(tmp_path))
+    fs.materialize(str(tmp_path) + os.sep, mode="lost_rename")
+    with open(dst, "rb") as r:
+        assert r.read() == b"v2"
+    assert not os.path.exists(tmp)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_write_json_atomic_is_all_or_nothing(mode, tmp_path):
+    """Micro-sweep: crash write_json_atomic at every one of its I/O ops,
+    in every mode — the destination must be the OLD doc or the NEW doc,
+    never empty or torn (the two bugs the pattern exists to prevent)."""
+    import json
+    for k in range(8):             # the pattern issues 4 ops; over-cover
+        d = tmp_path / f"{mode}{k}"
+        d.mkdir()
+        p = str(d / "state.json")
+        f = install(FaultFS(seed=2))
+        try:
+            write_json_atomic(p, {"v": "old"})
+            f.arm(k, scope=str(d) + os.sep, mode=mode)
+            try:
+                write_json_atomic(p, {"v": "new"})
+            except SimulatedCrash:
+                pass
+            f.materialize(str(d) + os.sep)
+            with open(p) as r:
+                assert json.load(r)["v"] in ("old", "new"), (mode, k)
+        finally:
+            uninstall()
+
+
+def test_kill9_not_swallowed_by_except_exception(fs, tmp_path):
+    fs.arm(0, mode="drop")
+    h = fs_open(str(tmp_path / "x.log"), "wb")
+    with pytest.raises(SimulatedCrash):
+        try:
+            h.write(b"data")
+        except Exception:          # the stray clause recovery helpers have
+            pytest.fail("except Exception swallowed a kill -9")
+
+
+def test_scope_binds_to_directory_not_prefix(fs, tmp_path):
+    """node1/ must not match node10/ (the abspath-strips-trailing-sep
+    regression)."""
+    for d in ("node1", "node10"):
+        (tmp_path / d).mkdir()
+    fs.arm(0, scope=str(tmp_path / "node1") + os.sep, mode="drop")
+    h = fs_open(str(tmp_path / "node10" / "a.log"), "wb")
+    h.write(b"ok")                 # out of scope: no crash
+    h.close()
+    with pytest.raises(SimulatedCrash):
+        fs_open(str(tmp_path / "node1" / "a.log"), "wb").write(b"boom")
+
+
+def test_abandoned_handle_cannot_flush_later(fs, tmp_path):
+    """Wrapped handles are raw: dropping one without close() (kill -9)
+    leaves nothing buffered that could land afterwards, and materialize
+    takes the fd with it."""
+    p = str(tmp_path / "seg.log")
+    h = fs_open(p, "wb")
+    h.write(b"X" * 10)             # write-through: already on disk
+    with open(p, "rb") as r:
+        assert r.read() == b"X" * 10
+    fs.materialize(str(tmp_path) + os.sep)   # force-closes the handle
+    assert h.closed
+    assert not os.path.exists(p)   # never synced, never durable
+
+
+# --------------------------------------------------- crash-point sweeps
+def test_record_run_is_deterministic(tmp_path):
+    a = run_crashpoint(str(tmp_path / "a"), seed=11, n_ops=SWEEP_N_OPS)
+    b = run_crashpoint(str(tmp_path / "b"), seed=11, n_ops=SWEEP_N_OPS)
+    assert not a["crashed"] and a["recovered_ok"]
+    assert a["ops"] == b["ops"]    # the sweep domain replays exactly
+
+
+def test_probe_crash_site_is_reproducible(tmp_path):
+    a = run_crashpoint(str(tmp_path / "a"), seed=11, crash_index=40,
+                       mode="torn", n_ops=SWEEP_N_OPS)
+    b = run_crashpoint(str(tmp_path / "b"), seed=11, crash_index=40,
+                       mode="torn", n_ops=SWEEP_N_OPS)
+    assert a["crash"] == b["crash"]
+    assert a["crashed"] and b["crashed"]
+
+
+@pytest.mark.crashpoint
+@pytest.mark.parametrize("mode", MODES)
+def test_exhaustive_crashpoint_sweep(mode, tmp_path):
+    """Every numbered I/O op of the seeded workload is a crash point:
+    kill -9 there, recover, and require zero acked-write loss + a clean
+    structural audit."""
+    rec = run_crashpoint(str(tmp_path / "record"), seed=11,
+                         n_ops=SWEEP_N_OPS)
+    assert rec["recovered_ok"] and not rec["crashed"]
+    failures = []
+    for k in range(rec["ops"]):
+        r = run_crashpoint(str(tmp_path / f"p{k}"), seed=11, crash_index=k,
+                           mode=mode, n_ops=SWEEP_N_OPS)
+        assert r["crashed"], f"crash index {k} never fired"
+        if not r["recovered_ok"]:
+            failures.append((k, r["crash"], r["violations"][:2],
+                             r["audit"][:2]))
+    assert not failures, (
+        f"{len(failures)}/{rec['ops']} crash points lost acked state under "
+        f"{mode!r}: {failures[:5]} — reproduce any with "
+        f"run_crashpoint(dir, seed=11, crash_index=K, mode={mode!r}, "
+        f"n_ops={SWEEP_N_OPS})")
+
+
+@pytest.mark.crashpoint
+@pytest.mark.parametrize("engine", ["original", "dwisckey", "nezha_nogc"])
+def test_crashpoint_sweep_baseline_engines(engine, tmp_path):
+    """The baseline engines' persistence (raft vlog / WAL / wisc vlog)
+    survives the same sweep — strided, cycling the three modes so every
+    index crashes in at least one mode across the engines."""
+    rec = run_crashpoint(str(tmp_path / "record"), seed=4, engine=engine,
+                         n_ops=SWEEP_N_OPS)
+    assert rec["recovered_ok"] and not rec["crashed"]
+    for k in range(0, rec["ops"], 3):
+        mode = MODES[(k // 3) % len(MODES)]
+        r = run_crashpoint(str(tmp_path / f"p{k}"), seed=4, crash_index=k,
+                           mode=mode, engine=engine, n_ops=SWEEP_N_OPS)
+        assert r["crashed"] and r["recovered_ok"], (
+            f"run_crashpoint(dir, seed=4, crash_index={k}, mode={mode!r}, "
+            f"engine={engine!r}, n_ops={SWEEP_N_OPS}) -> "
+            f"{r['violations'][:3]} {r['audit'][:3]}")
+
+
+@pytest.mark.crashpoint
+@pytest.mark.parametrize("mode", MODES)
+def test_full_cluster_restart_durability_gate(mode, tmp_path):
+    """Fleet power loss at a (torn) I/O point: every node restarts from
+    its durable view, no acked write lost, byte-equal scans everywhere."""
+    for k in (25, 80, 200, 450):
+        r = run_full_restart(str(tmp_path / f"f{k}"), seed=9,
+                             crash_index=k, mode=mode)
+        assert r["recovered_ok"], (
+            f"run_full_restart(dir, seed=9, crash_index={k}, "
+            f"mode={mode!r}) -> converged={r['converged']} "
+            f"{r['violations'][:3]} {r['audit'][:3]}")
+
+
+# ------------------------------------------------------- mid-op chaos
+def test_mid_op_chaos_schedule_keeps_history_clean(tmp_path):
+    """kill_leader_mid_put + crash_mid_gc + crash_mid_adoption, each with
+    a restart: zero checker violations, and the health report counts the
+    injected faults."""
+    f = install(FaultFS(seed=7))
+    try:
+        c = Cluster(n=3, engine="nezha", workdir=str(tmp_path / "w"),
+                    seed=7, sync=True, engine_kwargs={"gc_threshold": 4096})
+        c.elect()
+        sched = ChaosSchedule([
+            FaultEvent(0.20, "kill_leader_mid_put"),
+            FaultEvent(0.40, "restart", recovery=True),
+            FaultEvent(0.55, "crash_mid_gc"),
+            FaultEvent(0.70, "restart", recovery=True),
+            FaultEvent(0.80, "crash_mid_adoption"),
+            FaultEvent(0.92, "restart", recovery=True),
+        ], seed=7)
+        spec = WorkloadSpec(n_ops=120, n_keys=60, vsize=128, seed=7,
+                            virtual_time=True)
+        rep = run_workload(c, spec, chaos=sched)
+        assert rep.violations == []
+        faults = c.health_report()["faults"]
+        assert sum(pn.get("mid_op_crash", 0)
+                   for pn in faults["per_node"]) >= 1
+        assert faults["faultfs"]["crashes"] >= 1
+    finally:
+        uninstall()
+
+
+def test_mid_op_actions_degrade_without_faultfs(tmp_path):
+    """The same schedule with no FaultFS installed degrades to polite
+    faults (kill / gc_storm / no-op) — schedules stay portable."""
+    c = Cluster(n=3, engine="nezha", workdir=str(tmp_path / "w"), seed=3,
+                engine_kwargs={"gc_threshold": 4096})
+    c.elect()
+    sched = ChaosSchedule([
+        FaultEvent(0.30, "kill_leader_mid_put"),
+        FaultEvent(0.55, "restart", recovery=True),
+        FaultEvent(0.70, "crash_mid_gc", recovery=True),
+    ], seed=3)
+    rep = run_workload(c, WorkloadSpec(n_ops=80, n_keys=40, seed=3,
+                                       virtual_time=True), chaos=sched)
+    assert rep.violations == []
+    kills = [t for t in rep.timeline if t["action"] == "kill_leader_mid_put"]
+    assert kills and kills[0]["detail"] is not None
+
+
+# -------------------------------------------------- cluster-level bits
+def test_cluster_recover_flag_full_restart(tmp_path):
+    """Cluster(recover=True) boots every node from an existing workdir
+    (the politely-shut-down case; the torn cases live in the sweeps)."""
+    wd = str(tmp_path / "c")
+    c = Cluster(n=3, engine="nezha", workdir=wd, seed=2, sync=True,
+                engine_kwargs={"gc_threshold": 4096})
+    c.elect()
+    items = {b"k%04d" % i: b"v%04d" % i * 20 for i in range(12)}
+    for k, v in items.items():
+        c.put(k, v)
+    for e in c.engines:
+        e.close()
+    rec = Cluster(n=3, engine="nezha", workdir=wd, seed=5, recover=True)
+    rec.elect()
+    rec.put(b"zz-liveness", b"alive")
+    for k, v in items.items():
+        assert rec.get(k) == v
+    rec.destroy()
+
+
+def test_virtual_time_latencies_are_deterministic(tmp_path):
+    """virtual_time=True: identical seeds give IDENTICAL tail quantiles
+    (ticks * tick_us), independent of host CPU load."""
+    def one(sub):
+        c = Cluster(n=3, engine="nezha", workdir=str(tmp_path / sub),
+                    seed=6, engine_kwargs={"gc_threshold": 8192})
+        c.elect()
+        rep = run_workload(
+            c, WorkloadSpec(n_ops=100, n_keys=50, seed=6,
+                            virtual_time=True),
+            chaos=ChaosSchedule.kill_and_recover(seed=6))
+        assert rep.violations == []
+        return {lab: h.summary() for lab, h in rep.hist.items()}
+
+    assert one("a") == one("b")
