@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test smoke chaos crash bench bench-full
+.PHONY: test smoke chaos crash heal bench bench-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,6 +18,12 @@ chaos:
 # full-cluster-restart durability gate
 crash:
 	CRASHPOINT_N_OPS=48 $(PY) -m pytest -q -m crashpoint
+
+# self-healing membership suite at a wider config-change-window sweep
+# than the tier-1 default (add learner -> promote -> remove voter, fleet
+# kill -9 at every sampled I/O index in the window)
+heal:
+	MEMBER_SWEEP_N=64 $(PY) -m pytest -q -m membership
 
 bench:
 	$(PY) -m benchmarks.run

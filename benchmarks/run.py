@@ -42,7 +42,16 @@ def smoke() -> int:
          every time with zero acked-write loss and a clean structural
          audit, and one full-cluster restart at a torn point converges
          byte-equal.  Any failure reproduces from {seed, crash_index,
-         mode} alone (see repro.core.workload.run_crashpoint).
+         mode} alone (see repro.core.workload.run_crashpoint),
+      8. self-healing gate (membership): a seeded kill-then-replace cycle
+         — kill a voter hard, join a learner, auto-promote it once run
+         shipping catches it up, retire the dead id — ends with zero
+         history violations, a restored 3-voter quorum, byte-equal scans
+         across the final voter set and nonzero learner catch-up bytes
+         on the wire (Metrics.on_ship); plus a 32-point fleet kill -9
+         sweep across the config-change commit window that always
+         recovers to ONE committed config with no acked-write loss and
+         never two leaders for one term.
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
@@ -133,6 +142,65 @@ def smoke() -> int:
          f";converged={int(fr['converged'])}"
          f";violations={len(fr['violations'])};audit={len(fr['audit'])}")
 
+    # self-healing gate: seeded kill-then-replace cycle + a crash-point
+    # sweep of the config-change commit window
+    from repro.core.cluster import Cluster
+    from repro.core.workload import (OpRecord, check_history,
+                                     run_membership_crashpoint)
+    with tempfile.TemporaryDirectory(prefix="smoke_heal_") as hd:
+        hc = Cluster(n=3, engine="nezha", workdir=f"{hd}/c", seed=31,
+                     engine_kwargs={"gc_threshold": 4096})
+        hc.elect()
+        heal_hist = []
+        for i in range(40):
+            k, v = b"hk%06d" % i, b"hv%06d" % i
+            hc.put(k, v)
+            heal_hist.append(OpRecord("put", k, v))
+        hc.force_gc()
+        hc.drain_shipping(2000)
+        ship0 = sum(m.total_ship_bytes() for m in hc.metrics)
+        hc.crash(1)                      # kill a voter hard
+        new = hc.replace_node(1)         # learner join -> promote -> retire
+        for i in range(40, 56):
+            k, v = b"hk%06d" % i, b"hv%06d" % i
+            hc.put(k, v)
+            heal_hist.append(OpRecord("put", k, v))
+        got = hc.scan(b"hk", b"hl")
+        heal_hist.append(OpRecord("scan", value=got, lo=b"hk", hi=b"hl"))
+        heal_viol = check_history(heal_hist)
+        hl = hc.leader()
+        heal_voters = sorted(hl.voters)
+        for _ in range(8000):            # settle applies, then compare
+            if all(hc.nodes[i].last_applied >= hl.commit_index
+                   for i in heal_voters):
+                break
+            hc.tick()
+        heal_scans = [hc.engines[i].scan(b"hk", b"hl") for i in heal_voters]
+        heal_equal = all(s == heal_scans[0] for s in heal_scans[1:])
+        heal_ship = sum(m.total_ship_bytes() for m in hc.metrics) - ship0
+        for e in hc.engines:
+            if e is not None:
+                e.close()
+    hm_total = hm_fail = 0
+    with tempfile.TemporaryDirectory(prefix="smoke_heal_cp_") as hpd:
+        hrec = run_membership_crashpoint(f"{hpd}/record", seed=31)
+        mlo, mhi = hrec["member_window"]
+        for k in range(32):
+            r = run_membership_crashpoint(
+                f"{hpd}/p{k}", seed=31,
+                crash_index=mlo + (mhi - mlo) * k // 32,
+                mode=("torn", "drop")[k % 2])
+            hm_total += 1
+            if not (r["crashed"] and r["recovered_ok"]):
+                hm_fail += 1
+    show("smoke_heal/replace_cycle", 0,
+         f"violations={len(heal_viol)};voters={len(heal_voters)}"
+         f";removed_absent={int(1 not in heal_voters)}"
+         f";scan_equal={int(heal_equal)};ship_bytes={heal_ship}")
+    show("smoke_heal/config_window_sweep", 0,
+         f"points={hm_total};failures={hm_fail}"
+         f";window={mlo}-{mhi}")
+
     ok = True
     if wa["nezha"] > wa["original"]:
         show("smoke/FAIL", 0, f"nezha_wa={wa['nezha']:.2f}_exceeds_"
@@ -198,6 +266,16 @@ def smoke() -> int:
              f"{int(fr['converged'])}_violations={len(fr['violations'])}"
              f"_audit={len(fr['audit'])}")
         ok = False
+    if heal_viol or heal_voters != [0, 2, new] or not heal_equal \
+            or heal_ship <= 0:
+        show("smoke/FAIL", 0, "replace_cycle_violations="
+             f"{len(heal_viol)}_voters={heal_voters}"
+             f"_scan_equal={int(heal_equal)}_ship_bytes={heal_ship}")
+        ok = False
+    if hm_fail:
+        show("smoke/FAIL", 0, "config_window_sweep_failed_at_"
+             f"{hm_fail}_of_{hm_total}_points_seed31")
+        ok = False
     if ok:
         show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
              f";original_wa={wa['original']:.2f}"
@@ -213,7 +291,10 @@ def smoke() -> int:
              f";chaos_violations={ch.get('violations', 1):.0f}"
              f";chaos_p99_ratio={ch.get('p99_ratio', 99):.2f}"
              f";crashpoints={cp_total}_all_recovered"
-             f";full_restart_ok={int(fr['recovered_ok'])}")
+             f";full_restart_ok={int(fr['recovered_ok'])}"
+             f";heal_voters={len(heal_voters)}"
+             f";heal_ship_bytes={heal_ship}"
+             f";heal_crashpoints={hm_total}_all_recovered")
     common.write_artifact("smoke", rows)
     return 0 if ok else 1
 

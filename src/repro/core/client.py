@@ -57,6 +57,14 @@ class StaleReadError(Exception):
     or a node whose applied state lags the session token for SESSION."""
 
 
+class NodeRemovedError(StaleReadError):
+    """The contacted node was removed from the cluster membership: its
+    address is permanently dead (SimNet destroys its mail), so a pinned
+    or session-routed read must fail fast with this instead of hanging
+    on a dead mailbox.  Subclasses StaleReadError so existing refusal
+    handling keeps working; unpinned reads simply route around it."""
+
+
 class Session:
     """Client session: a token (`last_index`) of the newest raft index this
     client has observed — via its own writes or previous reads.  Any node
@@ -283,6 +291,10 @@ class NezhaClient:
 
     # ------------------------------------------------------- linearizable
     def _pinned(self, node: Optional[int]) -> Optional[RaftNode]:
+        if node is not None and node in getattr(self.cluster, "removed",
+                                                ()):
+            raise NodeRemovedError(
+                f"node {node} was removed from the cluster membership")
         nd = self.cluster.nodes[node] if node is not None else None
         if node is not None and (nd is None or node in self.cluster.net.down):
             raise StaleReadError(f"node {node} is down")
@@ -337,8 +349,10 @@ class NezhaClient:
             n = len(c.nodes)
             self._rr += 1
             candidates = [(self._rr + k) % n for k in range(n)]
+        removed = getattr(c, "removed", ())
         candidates = [nid for nid in candidates
-                      if c.nodes[nid] is not None and nid not in c.net.down]
+                      if c.nodes[nid] is not None and nid not in c.net.down
+                      and nid not in removed]
 
         def serve(nid, stalled):
             nd = c.nodes[nid]

@@ -17,6 +17,7 @@ lightweight offsets, Original replays full values through the WAL path).
 """
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import time
@@ -25,6 +26,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core import faultfs
 from repro.core.client import NezhaClient, Session
 from repro.core.engines import ENGINES, NezhaEngine
+from repro.core.faultfs import write_json_atomic
 from repro.core.metrics import Metrics
 from repro.core.raft import LEADER, RaftNode
 from repro.core.shipping import RunAdopter, RunShipper
@@ -38,8 +40,8 @@ class Cluster:
                  election_timeout=(20, 40), max_batch: int = 64,
                  drop_prob: float = 0.0, lease_ticks: Optional[int] = None,
                  default_consistency: str = "linearizable",
-                 recover: bool = False):
-        self.n = n
+                 recover: bool = False, promote_lag: int = 16,
+                 auto_promote: bool = True):
         self.engine_name = engine
         self.workdir = workdir
         self.seed = seed
@@ -49,8 +51,27 @@ class Cluster:
         self.election_timeout = election_timeout
         self.max_batch = max_batch
         self.lease_ticks = lease_ticks
+        self.promote_lag = promote_lag
+        self.auto_promote = auto_promote
         os.makedirs(workdir, exist_ok=True)
+        # membership state: ids removed from the config (their address is
+        # dead forever) and, per node, the config it was CONSTRUCTED with
+        # — the recovery fallback when a node crashed before persisting
+        # any raft meta.  Both live in the cluster manifest so a full
+        # restart (recover=True) rebuilds the right shape.
+        self.removed: set = set()
+        self._construct_cfg: Dict[int, dict] = {}
+        if recover:
+            man = self._load_manifest()
+            if man is not None:
+                n = man["n"]
+                self.removed = set(man.get("removed", []))
+                self._construct_cfg = {int(k): dict(v) for k, v in
+                                       man.get("configs", {}).items()}
+        self.n = n
         self.net = SimNet(list(range(n)), seed=seed, drop_prob=drop_prob)
+        for r in self.removed:
+            self.net.remove_node(r)
         self.metrics: List[Metrics] = [Metrics() for _ in range(n)]
         self.engines: List = [None] * n
         self.nodes: List[Optional[RaftNode]] = [None] * n
@@ -59,7 +80,10 @@ class Cluster:
         # whatever its directory holds (the durability-gate path; workdir
         # must be a previous cluster's workdir)
         for i in range(n):
+            if i in self.removed:
+                continue        # a removed member stays removed
             self._make_node(i, fresh=not recover)
+        self._save_manifest()
         self.client = NezhaClient(self,
                                   default_consistency=default_consistency)
 
@@ -67,13 +91,38 @@ class Cluster:
     def _engine_dir(self, i: int) -> str:
         return os.path.join(self.workdir, f"node{i}")
 
-    def _make_node(self, i: int, fresh: bool):
+    def _manifest_path(self) -> str:
+        return os.path.join(self.workdir, "cluster.json")
+
+    def _save_manifest(self):
+        write_json_atomic(self._manifest_path(), {
+            "n": self.n,
+            "removed": sorted(self.removed),
+            "configs": {str(i): c for i, c in self._construct_cfg.items()},
+        })
+
+    def _load_manifest(self) -> Optional[dict]:
+        p = self._manifest_path()
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return json.load(f)
+
+    def _make_node(self, i: int, fresh: bool,
+                   voters: Optional[List[int]] = None,
+                   learners: Optional[List[int]] = None):
         cls = ENGINES[self.engine_name]
         eng = cls(self._engine_dir(i), self.metrics[i], sync=self.sync,
                   is_leader=(lambda i=i: i == self.leader_hint),
                   **self.engine_kwargs)
         self.engines[i] = eng
         eto = self.election_timeout
+        if fresh:
+            self._construct_cfg[i] = {
+                "voters": sorted(voters) if voters is not None
+                else sorted(range(self.n)),
+                "learners": sorted(learners or [])}
+        cc = self._construct_cfg.get(i)
         node = RaftNode(
             i, list(range(self.n)), self.net, eng, eng.apply,
             apply_batch_fn=getattr(eng, "apply_batch", None),
@@ -82,7 +131,11 @@ class Cluster:
             max_batch=self.max_batch,
             lease_ticks=self.lease_ticks,
             snapshot_fn=eng.snapshot,
-            install_snapshot_fn=getattr(eng, "install_snapshot", None))
+            install_snapshot_fn=getattr(eng, "install_snapshot", None),
+            voters=(cc["voters"] if cc else None),
+            learners=(cc["learners"] if cc else None),
+            promote_lag=self.promote_lag,
+            auto_promote=self.auto_promote)
         node.metrics = self.metrics[i]   # read-tier evidence (quorum rounds)
         # deterministic first leader: the hinted node's FIRST deadline
         # fires early; every later reset uses the full election timeout.
@@ -121,7 +174,11 @@ class Cluster:
             node.snap_term = st
             node.commit_index = si
             node.last_applied = si
-            node.current_term, node.voted_for = eng.load_meta()
+            term, vote, cfg = eng.load_meta()
+            node.current_term, node.voted_for = term, vote
+            # membership survives restart: persisted meta config as the
+            # base, plus any KIND_CONFIG entries in the recovered log tail
+            node.restore_config(cfg)
 
     # ---------------------------------------------------------------- time
     def tick(self, k: int = 1):
@@ -133,7 +190,8 @@ class Cluster:
 
     def leader(self) -> Optional[RaftNode]:
         live = [nd for i, nd in enumerate(self.nodes)
-                if nd is not None and i not in self.net.down]
+                if nd is not None and i not in self.net.down
+                and i not in self.removed]
         leaders = [nd for nd in live if nd.role == LEADER]
         if not leaders:
             return None
@@ -146,6 +204,104 @@ class Cluster:
                 return ld
             self.tick()
         raise TimeoutError("no leader elected")
+
+    # --------------------------------------------------------- membership
+    # Self-healing surface: single-server config changes through the Raft
+    # log (raft.py).  add_node joins a non-voting learner that catches up
+    # via InstallSnapshot + run shipping; the leader auto-promotes it once
+    # its applied index is within promote_lag of the commit index;
+    # remove_node retires an id forever (its SimNet address dies with it).
+    def add_node(self, *, max_ticks: int = 8000) -> int:
+        """Join a fresh node as a LEARNER; returns its id once the
+        add-learner config entry has committed and the node is running."""
+        nid = self.n
+        self.n += 1
+        self.net.add_node(nid)
+        self.metrics.append(Metrics())
+        self.engines.append(None)
+        self.nodes.append(None)
+        self.elect()
+        voters = learners = None
+        for _ in range(max_ticks):
+            ld = self.leader()
+            if ld is not None:
+                if nid in ld.learners and ld.config_index <= ld.commit_index:
+                    voters = sorted(ld.voters)
+                    learners = sorted(ld.learners)
+                    break
+                ld.propose_add_learner(nid)   # no-op while one's in flight
+            self.tick()
+        else:
+            raise TimeoutError("add_node: add-learner config never "
+                               "committed")
+        # construct the node with the COMMITTED config: it knows who may
+        # lead (rejecting stale candidates) and that it must not campaign
+        self._make_node(nid, fresh=True, voters=voters, learners=learners)
+        self._save_manifest()
+        return nid
+
+    def wait_promoted(self, nid: int, max_ticks: int = 20000) -> bool:
+        """Tick until the leader has auto-promoted `nid` to voter and the
+        promote config entry has committed."""
+        for _ in range(max_ticks):
+            ld = self.leader()
+            if ld is not None and nid in ld.voters and \
+                    ld.config_index <= ld.commit_index:
+                return True
+            self.tick()
+        return False
+
+    def remove_node(self, nid: int, *, max_ticks: int = 8000):
+        """Remove `nid` from the config (voter or learner, live or dead).
+        A live leader removes itself gracefully: leadership is transferred
+        to the best-caught-up voter first (TimeoutNow), with leader-
+        proposed self-removal + step-down as the fallback."""
+        ld = self.elect()
+        if ld.nid == nid and len(ld.voters) > 1:
+            ld.transfer_leadership()
+            for _ in range(max_ticks):
+                cur = self.leader()
+                if cur is not None and cur.nid != nid and \
+                        cur.commit_index >= cur.snap_index:
+                    break
+                self.tick()
+        done = False
+        for _ in range(max_ticks):
+            ld = self.leader()
+            if ld is not None:
+                if ld.nid != nid and nid not in ld.voters and \
+                        nid not in ld.learners and \
+                        ld.config_index <= ld.commit_index:
+                    done = True
+                    break
+                ld.propose_remove(nid)
+            self.tick()
+        if not done:
+            raise TimeoutError("remove_node: removal config never "
+                               "committed")
+        # the id is retired: shut the process down and kill its address —
+        # queued + future mail is destroyed (counted in dropped_msgs)
+        self.removed.add(nid)
+        if self.engines[nid] is not None:
+            self.engines[nid].close()
+        self.nodes[nid] = None
+        self.engines[nid] = None
+        self.net.remove_node(nid)
+        self._save_manifest()
+
+    def replace_node(self, dead: int, *, max_ticks: int = 20000) -> int:
+        """Self-healing cycle (the smoke-gate scenario): ensure `dead` is
+        down, join a fresh learner, wait for snapshot + run-shipping
+        catch-up to auto-promote it, then retire the dead id.  Quorum is
+        restored at the original voter count; returns the new node id."""
+        if self.nodes[dead] is not None:
+            self.crash(dead)
+        new = self.add_node(max_ticks=max_ticks)
+        if not self.wait_promoted(new, max_ticks=max_ticks):
+            raise TimeoutError(f"replace_node: learner {new} never "
+                               "promoted")
+        self.remove_node(dead, max_ticks=max_ticks)
+        return new
 
     # -------------------------------------------------------------- client
     # Thin wrappers over the consistency-tiered client: the leadership-
@@ -207,7 +363,8 @@ class Cluster:
                     tip = ld.shipper.records[-1][0]
                     shipped = all(
                         p in self.net.down or self.nodes[p] is None or
-                        ld.shipper.peers[p].pos >= tip
+                        (ld.shipper.peers.get(p) is not None and
+                         ld.shipper.peers[p].pos >= tip)
                         for p in ld.peers)
                 if caught_up and shipped:
                     return True
@@ -245,11 +402,24 @@ class Cluster:
         nodes = []
         for i, nd in enumerate(self.nodes):
             if nd is None:
-                nodes.append({"node": i, "up": False})
+                nodes.append({
+                    "node": i, "up": False,
+                    "membership": "removed" if i in self.removed
+                    else "down"})
                 continue
+            if i in self.removed:
+                membership = "removed"
+            elif nd.is_voter:
+                membership = "voter"
+            elif nd.nid in nd.learners:
+                membership = "learner"
+            else:
+                membership = "none"     # e.g. demoted but still running
             nodes.append({
                 "node": i, "up": i not in self.net.down,
                 "role": nd.role, "term": nd.current_term,
+                "membership": membership,
+                "config_index": nd.config_index,
                 "commit_index": nd.commit_index,
                 "last_applied": nd.last_applied,
                 "lease_valid": nd.lease_valid(),
@@ -257,11 +427,18 @@ class Cluster:
         return {
             "time": self.net.time,
             "leader": ld.nid if ld is not None else None,
+            "membership": {
+                "voters": sorted(ld.voters) if ld is not None else None,
+                "learners": sorted(ld.learners) if ld is not None else None,
+                "config_index": ld.config_index if ld is not None else None,
+                "removed": sorted(self.removed),
+            },
             "nodes": nodes,
             "net": {"sent_msgs": self.net.sent_msgs,
                     "dropped_msgs": self.net.dropped_msgs,
                     "drop_prob": self.net.drop_prob,
                     "down": sorted(self.net.down),
+                    "removed": sorted(self.net.removed),
                     "partitions": [sorted(p) for p in self.net.blocked]},
             "reads": self.read_report(),
             "replication": self.replication_report(),

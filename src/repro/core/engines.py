@@ -83,6 +83,18 @@ tests/test_crashpoints.py — kill -9 at ANY numbered I/O op):
       declares them complete; retired files are deleted only after the
       manifest swap is fully durable.
     * the ship cursor — ship_pos rides in the manifest, same swap.
+    * the membership config — the newest KIND_CONFIG entry a node has
+      ADOPTED (effective on append) rides in raft_meta.json next to
+      term/vote, and the entry itself is in the fsynced value log.  What
+      a LEARNER persists before promotion is exactly a voter's state: the
+      adopted run set + manifest (its catch-up arrived as InstallSnapshot
+      + shipped runs, both durable via the manifest swap), the applied
+      log tail in its own value log, and the raft meta including the
+      config that added it.  Promotion adds no new durability class —
+      the promote entry is just another config commit under the widened
+      quorum, so a learner crashing at ANY point before/after promotion
+      recovers to a state the leader can resume shipping to (ship_pos
+      cursor) without re-running GC.
 
   May legally be lost:
     * the unacked tail — value-log bytes past the last fsync (dropped or
@@ -131,19 +143,24 @@ class EngineBase(LogStoreBase):
         self._meta_path = os.path.join(dirpath, "raft_meta.json")
 
     # ------------------------------------------------------ LogStore parts
-    def persist_meta(self, term: int, voted_for: Optional[int]):
+    def persist_meta(self, term: int, voted_for: Optional[int],
+                     config: Optional[dict] = None):
         # raft safety state: a lost term/vote re-grants a vote after
-        # restart, so this must survive kill -9 => full atomic pattern
-        write_json_atomic(self._meta_path,
-                          {"term": term, "voted_for": voted_for})
+        # restart, and a lost membership config re-widens a quorum the
+        # node already narrowed — so this must survive kill -9 => full
+        # atomic pattern.  `config` is {"index", "voters", "learners"}.
+        meta = {"term": term, "voted_for": voted_for}
+        if config is not None:
+            meta["config"] = config
+        write_json_atomic(self._meta_path, meta)
         self.metrics.on_write("raft_meta", 32)
 
-    def load_meta(self) -> Tuple[int, Optional[int]]:
+    def load_meta(self) -> Tuple[int, Optional[int], Optional[dict]]:
         if not os.path.exists(self._meta_path):
-            return 0, None
+            return 0, None, None
         with open(self._meta_path) as f:
             m = json.load(f)
-        return m["term"], m["voted_for"]
+        return m["term"], m["voted_for"], m.get("config")
 
     # -------------------------------------------------------- state machine
     def apply_batch(self, pairs: List[Tuple[LogEntry, int]]):

@@ -114,7 +114,7 @@ class LatencyHistogram:
 # and flat ints.  gc_cycle_log is summarized by length (gc_cycles).
 _SNAP_DICTS = ("write_bytes", "read_bytes", "write_ops", "read_ops",
                "cache_hits", "ship_bytes", "ship_ops", "read_tiers",
-               "fault_injections")
+               "fault_injections", "membership_events")
 _SNAP_INTS = ("fsyncs", "bloom_skips", "read_quorum_rounds",
               "follower_serves", "session_stalls")
 
@@ -154,6 +154,10 @@ class Metrics:
     # health_report() and the sweep artifacts state exactly how much abuse
     # a passing run absorbed.
     fault_injections: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+    # membership-change evidence: config proposals/adoptions, learner
+    # promotions, leadership transfers (raft.py self-healing path)
+    membership_events: Dict[str, int] = field(
         default_factory=lambda: defaultdict(int))
     latencies_us: Dict[str, List[float]] = field(
         default_factory=lambda: defaultdict(list))
@@ -197,6 +201,11 @@ class Metrics:
         """One injected fault applied to this node (kill -9, torn write,
         mid-op crash ...)."""
         self.fault_injections[kind] += 1
+
+    def on_membership(self, kind: str):
+        """One membership event on this node ('config_proposed',
+        'config_adopted', 'promote', 'transfer')."""
+        self.membership_events[kind] += 1
 
     def on_read_quorum_round(self):
         """One ReadIndex heartbeat-quorum round (covers every read queued
@@ -299,6 +308,7 @@ class Metrics:
             "follower_serves": self.follower_serves,
             "session_stalls": self.session_stalls,
             "fault_injections": dict(self.fault_injections),
+            "membership_events": dict(self.membership_events),
             "latency": lat,
         }
 

@@ -30,22 +30,47 @@ Read path (client.py's consistency tiers ride on these primitives):
     (§9.6), so the followers renewing a lease can never simultaneously
     form the majority that elects the leader's replacement.
 
+Membership (single-server changes, thesis §4):
+
+  * The configuration = (voters, learners) rides in the log as KIND_CONFIG
+    entries.  A config is EFFECTIVE ON APPEND — leader and followers adopt
+    it the moment it lands in their log — and commits under its own quorum
+    (the new voter set).  Only one voter add/remove per entry and at most
+    one config change in flight (propose_config refuses while the previous
+    one is uncommitted): adjacent configs then always share a majority, so
+    two disjoint quorums can never form.
+  * Learners replicate (AppendEntries / InstallSnapshot / run shipping)
+    but never vote, campaign, or count toward any quorum.  The leader
+    tracks each peer's applied index from replies and auto-promotes a
+    learner once it has applied the config that added it AND is within
+    `promote_lag` of the leader's commit index.
+  * A voter refuses RequestVote from any candidate outside its current
+    voter set — a removed node's runaway term cannot disturb the live
+    quorum.  Graceful leader removal: `transfer_leadership()` sends
+    TimeoutNow to the best-caught-up voter, whose transfer-flagged
+    election bypasses leader stickiness; the old leader's lease is killed
+    at send time so LEASE reads can't straddle the handoff.
+  * Truncating a log suffix rolls the config back to the newest surviving
+    entry; snapshots carry the config at their last index.
+
 Durability contract (see engines.py for the full statement): this module
 itself performs no file I/O — everything durable flows through the log
 store.  The two commitments Raft relies on are (a) `commit_window()` is
 called before any ack/commit ("durable before ack" below), so an acked
 entry is on disk at every crash point the FaultFS sweep can inject, and
-(b) `persist_meta()` lands term/vote atomically, so kill -9 can never
-resurrect a pre-vote term and double-grant a vote.
+(b) `persist_meta()` lands term/vote — and since PR 8 the adopted
+config — atomically, so kill -9 can never resurrect a pre-vote term,
+double-grant a vote, or forget a membership the node acted on.
 """
 from __future__ import annotations
 
+import json
 import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.simnet import SimNet
-from repro.core.valuelog import KIND_NOOP, KIND_PUT, LogEntry
+from repro.core.valuelog import KIND_CONFIG, KIND_NOOP, KIND_PUT, LogEntry
 
 FOLLOWER, CANDIDATE, LEADER = "follower", "candidate", "leader"
 
@@ -59,6 +84,9 @@ class RequestVote:
     candidate: int
     last_log_index: int
     last_log_term: int
+    # set on elections started by TimeoutNow: an explicit leadership
+    # transfer must override the receivers' leader stickiness (§3.10)
+    transfer: bool = False
 
 
 @dataclass
@@ -89,6 +117,7 @@ class AppendEntriesReply:
     success: bool
     match_index: int
     probe: int = 0    # echo of AppendEntries.probe
+    applied: int = 0  # follower's last_applied — drives learner promotion
 
 
 @dataclass
@@ -114,12 +143,25 @@ class InstallSnapshot:
     last_index: int
     last_term: int
     payload: Any  # engine-defined snapshot blob (e.g. sorted ValueLog bytes)
+    # membership as of last_index — a fresh learner's very first state
+    # arrives this way, so the snapshot must carry the config too
+    config_index: int = 0
+    voters: Tuple[int, ...] = ()
+    learners: Tuple[int, ...] = ()
 
 
 @dataclass
 class InstallSnapshotReply:
     term: int
     match_index: int
+
+
+@dataclass
+class TimeoutNow:
+    """Leadership transfer (§3.10): the leader tells the best-caught-up
+    voter to start an election immediately, stickiness notwithstanding."""
+    term: int
+    leader: int
 
 
 @dataclass
@@ -167,7 +209,8 @@ class LogStoreBase:
     def truncate_from(self, index: int):
         raise NotImplementedError
 
-    def persist_meta(self, term: int, voted_for: Optional[int]):
+    def persist_meta(self, term: int, voted_for: Optional[int],
+                     config: Optional[dict] = None):
         pass
 
 
@@ -184,9 +227,29 @@ class RaftNode:
                  max_batch: Optional[int] = None,
                  lease_ticks: Optional[int] = None,
                  snapshot_fn: Optional[Callable[[], Optional[Tuple[int, int, Any]]]] = None,
-                 install_snapshot_fn: Optional[Callable[[int, int, Any], None]] = None):
+                 install_snapshot_fn: Optional[Callable[[int, int, Any], None]] = None,
+                 voters: Optional[List[int]] = None,
+                 learners: Optional[List[int]] = None,
+                 promote_lag: int = 16,
+                 auto_promote: bool = True):
         self.nid = nid
-        self.peers = [p for p in peers if p != nid]
+        # membership: by default every constructor peer (plus self) is a
+        # voter; explicit voters/learners model a node joining an existing
+        # cluster (a fresh learner, a restarted member).  self.peers is
+        # always derived from the current config = all members minus self.
+        if voters is None:
+            voters = sorted(set(peers) | {nid})
+        self._configs: List[Tuple[int, Tuple[int, ...], Tuple[int, ...]]] = \
+            [(0, tuple(sorted(set(voters))),
+              tuple(sorted(set(learners or ()) - set(voters))))]
+        self.voters: set = set()
+        self.learners: set = set()
+        self.peers: List[int] = []
+        self._set_config()
+        self.promote_lag = promote_lag
+        self.auto_promote = auto_promote
+        self.peer_applied: Dict[int, int] = {}
+        self._transfer_until = _NEVER
         self.net = net
         self.store = log_store
         self.apply_fn = apply_fn
@@ -291,7 +354,215 @@ class RaftNode:
         return e
 
     def _persist_meta(self):
-        self.store.persist_meta(self.current_term, self.voted_for)
+        self.store.persist_meta(self.current_term, self.voted_for,
+                                config=self._meta_config())
+
+    # -------------------------------------------------------- membership
+    @property
+    def config_index(self) -> int:
+        return self._configs[-1][0]
+
+    @property
+    def is_voter(self) -> bool:
+        return self.nid in self.voters
+
+    def _meta_config(self) -> dict:
+        """The config recovery may take as its BASE: the newest one that
+        is committed (or snapshot-covered).  An uncommitted config is
+        recovered from its durable log entry instead — persisting it as
+        the base would make it impossible to roll back after a restart
+        when the new leader truncates the suffix that carried it."""
+        idx, v, l = self._config_at(max(self.commit_index, self.snap_index))
+        return {"index": idx, "voters": list(v), "learners": list(l)}
+
+    def _set_config(self):
+        """Derive live membership state from the newest config entry."""
+        _, v, l = self._configs[-1]
+        self.voters = set(v)
+        self.learners = set(l)
+        self.peers = sorted((self.voters | self.learners) - {self.nid})
+
+    def _quorum(self, count: int) -> bool:
+        return count * 2 > len(self.voters)
+
+    def _config_at(self, index: int) -> Tuple[int, Tuple[int, ...],
+                                              Tuple[int, ...]]:
+        """Newest config entry at or below `index` (for snapshots)."""
+        best = self._configs[0]
+        for c in self._configs:
+            if c[0] <= index:
+                best = c
+        return best
+
+    def _apply_config_change(self):
+        """A config was adopted or rolled back: refresh derived state,
+        persist it, and (on the leader) resize replication bookkeeping."""
+        self._set_config()
+        self._persist_meta()
+        if self.role == LEADER:
+            for p in self.peers:
+                self.next_index.setdefault(p, self.last_log_index + 1)
+                self.match_index.setdefault(p, 0)
+            gone = (set(self.next_index) | set(self.match_index)) \
+                - set(self.peers) - {self.nid}
+            for g in gone:
+                self.next_index.pop(g, None)
+                self.match_index.pop(g, None)
+                self._probe_acked.pop(g, None)
+                self._ack_basis.pop(g, None)
+                self.peer_applied.pop(g, None)
+            if self.shipper is not None:
+                self.shipper.sync_peers()
+
+    def _adopt_config_entry(self, e: LogEntry):
+        """Effective on append: the entry's config governs immediately."""
+        cfg = json.loads(bytes(e.value).decode())
+        self._configs = [c for c in self._configs if c[0] < e.index]
+        self._configs.append((e.index, tuple(cfg["voters"]),
+                              tuple(cfg["learners"])))
+        self._apply_config_change()
+        if self.metrics is not None:
+            self.metrics.on_membership("config_adopted")
+
+    def _rollback_configs(self, from_index: int):
+        """A log suffix was truncated: fall back to the newest config that
+        survived (the base entry — snapshot- or meta-backed — always
+        does)."""
+        if self._configs[-1][0] >= from_index and len(self._configs) > 1:
+            self._configs = [self._configs[0]] + \
+                [c for c in self._configs[1:] if c[0] < from_index]
+            self._apply_config_change()
+
+    def restore_config(self, meta_config: Optional[dict]):
+        """Recovery: rebuild the config history from the persisted meta
+        base plus any KIND_CONFIG entries surviving in the recovered log
+        (persist_meta is ordered after the log append, so the log can run
+        ahead of the meta but never behind it)."""
+        if meta_config and meta_config.get("voters"):
+            base = (int(meta_config.get("index", 0)),
+                    tuple(meta_config["voters"]),
+                    tuple(meta_config.get("learners", ())))
+        else:
+            base = self._configs[0]
+        cfgs = [base]
+        for e in self.entries:
+            if e.kind != KIND_CONFIG:
+                continue
+            e = self._hydrated(e.index)
+            if e.index > cfgs[-1][0]:
+                cfg = json.loads(bytes(e.value).decode())
+                cfgs.append((e.index, tuple(cfg["voters"]),
+                             tuple(cfg["learners"])))
+        self._configs = cfgs
+        self._set_config()
+
+    def propose_config(self, voters, learners) -> Optional[int]:
+        """Leader-only single-server membership change.  Refused while the
+        previous config entry is uncommitted (at most one in flight) and
+        for multi-voter jumps (adjacent configs must share a majority)."""
+        if self.role != LEADER:
+            return None
+        if self._configs[-1][0] > self.commit_index:
+            return None                      # one change in flight, max
+        voters = tuple(sorted(set(voters)))
+        learners = tuple(sorted(set(learners) - set(voters)))
+        cur_v = tuple(sorted(self.voters))
+        cur_l = tuple(sorted(self.learners))
+        if (voters, learners) == (cur_v, cur_l):
+            return self.config_index         # no-op: already in effect
+        if len(set(voters) ^ set(cur_v)) > 1:
+            raise ValueError("only single-server voter changes are safe "
+                             f"({cur_v} -> {voters})")
+        payload = json.dumps({"voters": list(voters),
+                              "learners": list(learners)}).encode()
+        entry = LogEntry(self.current_term, self.last_log_index + 1,
+                         KIND_CONFIG, b"", payload)
+        off = self.store.append(entry)
+        self.store.commit_window()           # durable before ack
+        self.entries.append(entry)
+        self.offsets.append(off)
+        self.match_index[self.nid] = self.last_log_index
+        self._adopt_config_entry(entry)      # effective on append
+        if self.metrics is not None:
+            self.metrics.on_membership("config_proposed")
+        self._advance_commit()
+        self._broadcast_append()
+        self._next_heartbeat = self.net.time + self.heartbeat_every
+        return entry.index
+
+    def propose_add_learner(self, nid: int) -> Optional[int]:
+        if nid in self.voters or nid in self.learners:
+            return self.config_index
+        return self.propose_config(self.voters, set(self.learners) | {nid})
+
+    def propose_promote(self, nid: int) -> Optional[int]:
+        if nid in self.voters:
+            return self.config_index
+        if nid not in self.learners:
+            return None
+        return self.propose_config(set(self.voters) | {nid},
+                                   set(self.learners) - {nid})
+
+    def propose_remove(self, nid: int) -> Optional[int]:
+        if nid not in self.voters and nid not in self.learners:
+            return self.config_index
+        return self.propose_config(set(self.voters) - {nid},
+                                   set(self.learners) - {nid})
+
+    def _maybe_promote(self):
+        """Leader tick: promote the first learner whose applied index has
+        caught up — it must have applied the config that added it AND sit
+        within promote_lag of our commit index."""
+        if self.role != LEADER or not self.auto_promote or not self.learners:
+            return
+        if self._configs[-1][0] > self.commit_index:
+            return                           # a change is already in flight
+        for lid in sorted(self.learners):
+            ap = self.peer_applied.get(lid, _NEVER)
+            if ap >= self.config_index and \
+                    ap + self.promote_lag >= self.commit_index:
+                if self.propose_promote(lid) is not None and \
+                        self.metrics is not None:
+                    self.metrics.on_membership("promote")
+                return
+
+    def transfer_leadership(self, to: Optional[int] = None) -> Optional[int]:
+        """Graceful handoff: pick the best-caught-up voter (unless told),
+        kill our own lease so no LEASE read straddles the change, and send
+        TimeoutNow.  We keep leading until the target's election deposes
+        us; if it never does, leases resume after one election timeout."""
+        if self.role != LEADER:
+            return None
+        cands = [v for v in self.voters if v != self.nid]
+        if not cands:
+            return None
+        if to is None or to not in cands:
+            to = max(cands, key=lambda p: (self.match_index.get(p, 0), -p))
+        self._transfer_until = self.net.time + self.eto[0]
+        self._abort_reads()                  # lease dies at send time
+        self.net.send(self.nid, to, TimeoutNow(self.current_term, self.nid))
+        if self.metrics is not None:
+            self.metrics.on_membership("transfer")
+        return to
+
+    def _on_timeout_now(self, src: int, m: TimeoutNow):
+        if m.term < self.current_term:
+            return
+        if m.term > self.current_term:
+            self._become_follower(m.term)
+        if self.role == LEADER or self.nid not in self.voters:
+            return
+        self._last_leader_contact = _NEVER   # the leader ASKED for this
+        self._start_election(transfer=True)
+
+    def _step_down(self):
+        """We led a cluster we are no longer a voter of and the removal
+        config just committed: stop leading (keep term and vote — clearing
+        voted_for inside a term could double-grant)."""
+        self.role = FOLLOWER
+        self.leader_id = None
+        self._abort_reads()
+        self._reset_election_deadline()
 
     def _become_follower(self, term: int):
         self.current_term = term
@@ -337,19 +608,28 @@ class RaftNode:
         a recent heartbeat-quorum ack basis."""
         if self.role != LEADER or self.commit_index < self._term_start_index:
             return False
-        return not self.peers or self.net.time < self.lease_until
+        if self.nid not in self.voters or \
+                self.net.time < self._transfer_until:
+            # a demoted leader, or one mid-transfer, must not serve local
+            # reads — its replacement may already be elected
+            return False
+        voter_peers = [v for v in self.voters if v != self.nid]
+        return not voter_peers or self.net.time < self.lease_until
 
     def _refresh_lease(self):
-        """Lease = (send time of the newest probe a MAJORITY has acked,
-        self included) + lease_ticks.  Sort peer ack bases descending and
-        take the quorum-th: every node in that set accepted our leadership
-        no earlier than that instant."""
-        if not self.peers:
+        """Lease = (send time of the newest probe a MAJORITY of VOTERS has
+        acked, self included) + lease_ticks.  Sort voter ack bases
+        descending and take the quorum-th: every node in that set accepted
+        our leadership no earlier than that instant."""
+        voter_peers = [v for v in self.voters if v != self.nid]
+        if not voter_peers or self.net.time < self._transfer_until:
             return
-        bases = sorted((self._ack_basis.get(p, _NEVER) for p in self.peers),
-                       reverse=True)
-        need = (len(self.peers) + 1) // 2   # peers needed beyond self
-        basis = bases[need - 1]
+        bases = sorted((self._ack_basis.get(p, _NEVER)
+                        for p in voter_peers), reverse=True)
+        # voters needed beyond self (self only counts if still a voter)
+        need = len(self.voters) // 2 + 1 \
+            - (1 if self.nid in self.voters else 0)
+        basis = bases[need - 1] if need >= 1 else self.net.time
         if basis > _NEVER:
             self.lease_until = max(self.lease_until,
                                    basis + self.lease_ticks)
@@ -372,9 +652,10 @@ class RaftNode:
     def _check_read_quorum(self):
         for h in self.pending_reads:
             if h.probe is not None and not h.confirmed:
-                acks = 1 + sum(1 for p in self.peers
-                               if self._probe_acked.get(p, 0) >= h.probe)
-                if acks * 2 > len(self.peers) + 1:
+                acks = sum(1 for v in self.voters
+                           if v == self.nid or
+                           self._probe_acked.get(v, 0) >= h.probe)
+                if self._quorum(acks):
                     h.confirmed = True
         self._serve_ready_reads()
 
@@ -399,8 +680,7 @@ class RaftNode:
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
-        if not self.peers:                       # single-node: self-commit
-            self._advance_commit()
+        self._advance_commit()   # single-voter configs self-commit here
         return entry.index
 
     def client_put_many(self, items: List[Tuple[bytes, bytes]]
@@ -421,8 +701,7 @@ class RaftNode:
         self.entries.extend(entries)
         self.offsets.extend(offs)
         self.match_index[self.nid] = self.last_log_index
-        if not self.peers:                       # single-node: self-commit
-            self._advance_commit()
+        self._advance_commit()   # single-voter configs self-commit here
         # eager dispatch: a full window should not wait for the heartbeat
         self._broadcast_append()
         self._next_heartbeat = self.net.time + self.heartbeat_every
@@ -446,7 +725,9 @@ class RaftNode:
                 self._next_heartbeat = now + self.heartbeat_every
             if self.shipper is not None:
                 self.shipper.tick()
-        elif now >= self.election_deadline:
+            self._maybe_promote()
+        elif self.nid in self.voters and now >= self.election_deadline:
+            # learners and removed nodes never campaign
             self._start_election()
         self._apply_committed()
         if self.role == LEADER:
@@ -455,7 +736,12 @@ class RaftNode:
             self.adopter.tick()   # install pending records once applied
 
     # ---------------------------------------------------------- election
-    def _start_election(self):
+    def _vote_quorum(self) -> bool:
+        return self._quorum(len(self.votes & self.voters))
+
+    def _start_election(self, transfer: bool = False):
+        if self.nid not in self.voters:
+            return                       # a non-voter can never lead
         self.role = CANDIDATE
         self.current_term += 1
         self.voted_for = self.nid
@@ -463,11 +749,11 @@ class RaftNode:
         self._persist_meta()
         self.votes = {self.nid}
         self._reset_election_deadline()
-        for p in self.peers:
+        for p in sorted(self.voters - {self.nid}):
             self.net.send(self.nid, p, RequestVote(
                 self.current_term, self.nid, self.last_log_index,
-                self.term_at(self.last_log_index)))
-        if not self.peers:
+                self.term_at(self.last_log_index), transfer=transfer))
+        if self._vote_quorum():
             self._become_leader()
 
     def _become_leader(self):
@@ -477,10 +763,12 @@ class RaftNode:
         self.next_index = {p: self.last_log_index + 1 for p in self.peers}
         self.match_index = {p: 0 for p in self.peers}
         self.match_index[self.nid] = self.last_log_index
-        # fresh term: no lease, no probe acks carry over
+        # fresh term: no lease, no probe acks, no transfer carry over
         self.lease_until = _NEVER
         self._probe_acked = {}
         self._ack_basis = {}
+        self.peer_applied = {}
+        self._transfer_until = _NEVER
         # no-op barrier entry to commit previous-term entries (Raft §8);
         # its index is also the floor for every ReadIndex in this term
         entry = LogEntry(self.current_term, self.last_log_index + 1,
@@ -491,8 +779,7 @@ class RaftNode:
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
-        if not self.peers:                       # single-node: self-commit
-            self._advance_commit()
+        self._advance_commit()   # single-voter configs self-commit here
         self._broadcast_append()
         self._next_heartbeat = self.net.time + self.heartbeat_every
 
@@ -518,8 +805,10 @@ class RaftNode:
         if snap is None:
             return False
         li, lt, payload = snap
+        ci, cv, cl = self._config_at(li)
         self.net.send(self.nid, peer, InstallSnapshot(
-            self.current_term, self.nid, li, lt, payload))
+            self.current_term, self.nid, li, lt, payload,
+            config_index=ci, voters=cv, learners=cl))
         if self.shipper is not None:
             # the snapshot carries the whole current run set: skip the
             # peer's shipping cursor past every record it supersedes,
@@ -556,6 +845,8 @@ class RaftNode:
             self._on_install_snapshot(src, msg)
         elif isinstance(msg, InstallSnapshotReply):
             self._on_snapshot_reply(src, msg)
+        elif isinstance(msg, TimeoutNow):
+            self._on_timeout_now(src, msg)
         elif isinstance(msg, ShipRun):
             if self.adopter is not None:
                 self.adopter.on_chunk(src, msg)
@@ -570,7 +861,13 @@ class RaftNode:
         self._reset_election_deadline()
 
     def _on_request_vote(self, src: int, m: RequestVote):
-        if self.net.time - self._last_leader_contact < self.eto[0]:
+        if m.candidate not in self.voters:
+            # Thesis §4.2.3: per our config this server cannot lead.  A
+            # removed node's runaway term must not disturb the live
+            # quorum, so we do not even adopt its term — total silence.
+            return
+        if not m.transfer and \
+                self.net.time - self._last_leader_contact < self.eto[0]:
             # Leader stickiness (Raft §9.6 / thesis §4.2.3): we heard from
             # a live leader within the minimum election timeout, so we
             # disregard the request ENTIRELY — no term adoption, no vote.
@@ -602,7 +899,7 @@ class RaftNode:
             return
         if m.granted:
             self.votes.add(src)
-            if len(self.votes) * 2 > len(self.peers) + 1:
+            if self._vote_quorum():   # only votes from voters count
                 self._become_leader()
 
     def _on_append(self, src: int, m: AppendEntries):
@@ -625,7 +922,8 @@ class RaftNode:
         if m.prev_log_index > self.last_log_index or \
                 self.term_at(m.prev_log_index) != m.prev_log_term:
             self.net.send(self.nid, src, AppendEntriesReply(
-                self.current_term, False, self.snap_index, probe=m.probe))
+                self.current_term, False, self.snap_index, probe=m.probe,
+                applied=self.last_applied))
             return
         # skip the prefix we already hold (snapshot-covered or term-matching)
         start = 0
@@ -646,17 +944,22 @@ class RaftNode:
                     self.store.truncate_from(idx)
                 self.entries = self.entries[:keep]
                 self.offsets = self.offsets[:keep]
+                self._rollback_configs(idx)
             batch = m.entries[start:]
             offs = self.store.append_batch(batch)  # single persistence pass
             self.entries.extend(batch)
             self.offsets.extend(offs)
             self.store.commit_window()             # durable before the ack
+            for e in batch:
+                if e.kind == KIND_CONFIG:          # effective on append
+                    self._adopt_config_entry(e)
         idx = m.prev_log_index + len(m.entries)
         if m.leader_commit > self.commit_index:
             self.commit_index = min(m.leader_commit, self.last_log_index)
-        self.net.send(self.nid, src, AppendEntriesReply(
-            self.current_term, True, idx, probe=m.probe))
         self._apply_committed()
+        self.net.send(self.nid, src, AppendEntriesReply(
+            self.current_term, True, idx, probe=m.probe,
+            applied=self.last_applied))
 
     def _on_append_reply(self, src: int, m: AppendEntriesReply):
         if m.term > self.current_term:
@@ -666,6 +969,8 @@ class RaftNode:
             return
         # probe echo: leadership acknowledged as of the round's send time
         # (success or not), driving ReadIndex confirmation + lease renewal
+        if m.applied > self.peer_applied.get(src, _NEVER):
+            self.peer_applied[src] = m.applied   # learner promotion gauge
         if m.probe and m.probe > self._probe_acked.get(src, 0):
             self._probe_acked[src] = m.probe
             basis = self._probe_sent.get(m.probe)
@@ -691,10 +996,17 @@ class RaftNode:
         for n in range(self.last_log_index, self.commit_index, -1):
             if self.term_at(n) != self.current_term:
                 break
-            votes = sum(1 for p in self.match_index.values() if p >= n)
-            if votes * 2 > len(self.peers) + 1:
+            # quorum over the CURRENT voter set — a config entry commits
+            # under itself (effective on append); learners never count
+            votes = sum(1 for v in self.voters
+                        if self.match_index.get(v, 0) >= n)
+            if self._quorum(votes):
                 self.commit_index = n
                 break
+        if self.role == LEADER and self.nid not in self.voters and \
+                self.config_index <= self.commit_index:
+            # we led the removal of ourselves and it just committed
+            self._step_down()
         self._apply_committed()
 
     def _apply_committed(self):
@@ -738,6 +1050,12 @@ class RaftNode:
         self.offsets = self.offsets[keep:]
         self.snap_index = index
         self.snap_term = term
+        # collapse config history the snapshot now covers into one base,
+        # and pin it in the meta: the log entries that carried it are
+        # gone, so recovery can no longer replay it from the log
+        base = self._config_at(index)
+        self._configs = [base] + [c for c in self._configs if c[0] > index]
+        self._persist_meta()
 
     def _on_install_snapshot(self, src: int, m: InstallSnapshot):
         if m.term > self.current_term:
@@ -779,6 +1097,14 @@ class RaftNode:
         # the engine rewrote the retained tail into a fresh segment:
         # re-point the surviving log at the new offsets
         self.repoint_offsets(new_offsets)
+        if m.voters:
+            # the snapshot's config becomes our base; configs from a
+            # retained suffix stay stacked on top of it
+            tail = [c for c in self._configs if c[0] > m.last_index] \
+                if keep_suffix else []
+            self._configs = [(m.config_index, tuple(m.voters),
+                              tuple(m.learners))] + tail
+            self._apply_config_change()
         self.commit_index = max(self.commit_index, m.last_index)
         self.last_applied = max(self.last_applied, m.last_index)
         self.net.send(self.nid, src, InstallSnapshotReply(
@@ -790,5 +1116,8 @@ class RaftNode:
         self.match_index[src] = max(self.match_index.get(src, 0),
                                     m.match_index)
         self.next_index[src] = self.match_index[src] + 1
+        if m.match_index > self.peer_applied.get(src, _NEVER):
+            # an installed snapshot IS applied state through its index
+            self.peer_applied[src] = m.match_index
         if self.shipper is not None:
             self.shipper.on_snapshot_acked(src, m.match_index)

@@ -81,6 +81,17 @@ class RunShipper:
         self.peers: Dict[int, _PeerShip] = {p: _PeerShip()
                                             for p in node.peers}
 
+    def sync_peers(self):
+        """Membership changed: open a fresh cursor for every new member
+        (a joining learner starts from pos (0,0) and is caught up by
+        snapshot + resumable chunks) and drop removed members so their
+        stale cursor can no longer pin records in _prune."""
+        for p in self.node.peers:
+            self.peers.setdefault(p, _PeerShip())
+        for gone in set(self.peers) - set(self.node.peers):
+            del self.peers[gone]
+        self._prune()
+
     # ------------------------------------------------------------ sealing
     def on_run_sealed(self, rec: dict, data: bytes):
         """Engine hook: a run was just committed to the leader manifest."""
@@ -108,7 +119,11 @@ class RunShipper:
     # --------------------------------------------------------------- send
     def tick(self):
         node = self.node
-        if node.role != LEADER or not self.records:
+        if node.role != LEADER:
+            return
+        if set(self.peers) != set(node.peers):
+            self.sync_peers()   # config changed while we weren't leader
+        if not self.records:
             return
         now = node.net.time
         for p, ps in self.peers.items():

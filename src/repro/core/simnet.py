@@ -36,6 +36,7 @@ class SimNet:
         self._seq = 0
         self.blocked: set = set()      # frozenset({a,b}) pairs
         self.down: set = set()         # crashed nodes
+        self.removed: set = set()      # membership-removed node ids
         # per-link overrides: frozenset({a,b}) -> (min_delay, max_delay)
         # and -> drop probability (falls back to the net-wide defaults)
         self.link_delay: Dict[frozenset, Tuple[int, int]] = {}
@@ -85,9 +86,26 @@ class SimNet:
             self.link_delay.pop(pair, None)
             self.link_drop.pop(pair, None)
 
+    # --------------------------------------------------------- membership
+    def add_node(self, nid: int):
+        """Give a joining node a mailbox (idempotent); a previously
+        removed id rejoining comes back with an empty queue."""
+        self._q.setdefault(nid, [])
+        self.removed.discard(nid)
+
+    def remove_node(self, nid: int):
+        """Membership removal: the address is dead forever — queued and
+        future mail is destroyed (counted in dropped_msgs) so a zombie
+        node can neither receive stale RPCs nor inject new ones."""
+        self.removed.add(nid)
+        self.dropped_msgs += len(self._q.get(nid, []))
+        if nid in self._q:
+            self._q[nid].clear()
+
     # ------------------------------------------------------------ transport
     def send(self, src: int, dst: int, msg: Any, size: int = 0):
-        if src in self.down or dst in self.down:
+        if src in self.down or dst in self.down or \
+                src in self.removed or dst in self.removed:
             self.dropped_msgs += 1
             return
         pair = frozenset((src, dst))
@@ -101,15 +119,19 @@ class SimNet:
         lo, hi = self.link_delay.get(pair, (self.min_delay, self.max_delay))
         delay = self.rng.randint(lo, hi)
         self._seq += 1
-        heapq.heappush(self._q[dst], (self.time + delay, self._seq, src, msg))
+        # setdefault: mail to a member that is still being provisioned
+        # (config committed, node not yet constructed) queues until it
+        # starts delivering instead of crashing the sender
+        heapq.heappush(self._q.setdefault(dst, []),
+                       (self.time + delay, self._seq, src, msg))
         self.sent_msgs += 1
         self.sent_bytes += size
 
     def deliver(self, nid: int) -> List[Tuple[int, Any]]:
-        if nid in self.down:
+        if nid in self.down or nid in self.removed:
             return []
         out = []
-        q = self._q[nid]
+        q = self._q.get(nid, [])
         while q and q[0][0] <= self.time:
             _, _, src, msg = heapq.heappop(q)
             if self.trace is not None:
@@ -131,8 +153,10 @@ class SimNet:
 
     def crash(self, nid: int):
         self.down.add(nid)
-        self.dropped_msgs += len(self._q[nid])   # in-flight mail vanishes
-        self._q[nid].clear()
+        q = self._q.get(nid)
+        if q:
+            self.dropped_msgs += len(q)   # in-flight mail vanishes
+            q.clear()
 
     def restart(self, nid: int):
         self.down.discard(nid)

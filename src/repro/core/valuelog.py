@@ -25,6 +25,7 @@ MAGIC = 0x4E5A4841  # "NZHA"
 KIND_PUT = 1
 KIND_NOOP = 2
 KIND_SNAP = 3
+KIND_CONFIG = 4   # membership change entry: value = JSON {voters, learners}
 
 
 @dataclass

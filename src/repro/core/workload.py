@@ -37,7 +37,11 @@ the stalls happen on purpose:
     the node from its durable view and audits for acked-write loss plus
     manifest/run-set/raft-log integrity; run_full_restart() does the
     same to ALL n nodes at once (fleet power loss) and additionally
-    requires byte-equal engine scans after restart.  Three chaos actions
+    requires byte-equal engine scans after restart;
+    run_membership_crashpoint() sweeps the config-change commit window
+    (add learner -> promote -> remove voter) and additionally requires
+    one committed config across the members and one leader per term
+    across the crash boundary.  Three chaos actions
     (kill_leader_mid_put, crash_mid_gc, crash_mid_adoption) arm the same
     shim MID-operation, so the op loop treats an escaping
     SimulatedCrash as a node death — hard-crash + ack-ambiguity
@@ -168,9 +172,15 @@ def zipf_key_indices(n_ops: int, n_keys: int, theta: float, seed: int):
 #                         cycle — it dies inside the build/seal/swap window
 #   crash_mid_adoption    arm a follower's run files (torn) and tick until
 #                         an adoption record lands mid-install
+# Membership action (opt-in; not in ChaosSchedule.generate's default kinds
+# so pinned same-seed artifacts keep their schedules):
+#   replace_random_node   kill a random live voter hard, join a fresh
+#                         learner, wait for auto-promotion, retire the
+#                         dead id — the full self-healing cycle under load
 ACTIONS = ("kill_leader", "restart", "isolate_leader", "partition_link",
            "heal", "lossy", "heal_lossy", "gc_storm",
-           "kill_leader_mid_put", "crash_mid_gc", "crash_mid_adoption")
+           "kill_leader_mid_put", "crash_mid_gc", "crash_mid_adoption",
+           "replace_random_node")
 
 
 @dataclass
@@ -257,6 +267,10 @@ class _ChaosRunner:
         self.timeline: List[dict] = []
         self.phase = "steady"
         self._recoveries = sum(1 for e in schedule.events if e.recovery)
+        # runner-private stream (victim picks etc.): drawing here can never
+        # shift a SimNet delivery delay, so same-seed runs with different
+        # schedules still share the fabric's delivery sequence
+        self.rng = random.Random(f"chaosrun:{schedule.seed}")
 
     def fire_due(self, op_index: int):
         while self.pending and self.pending[0].at * self.n_ops <= op_index:
@@ -280,8 +294,9 @@ class _ChaosRunner:
         if ev.action == "restart":
             nid = self.killed.pop() if self.killed else None
             # mid-op crashes can race a scheduled kill: only revive a node
-            # that is actually down
-            if nid is not None and c.nodes[nid] is None:
+            # that is actually down — and never a membership-removed id
+            if nid is not None and c.nodes[nid] is None \
+                    and nid not in getattr(c, "removed", ()):
                 c.restart(nid)
             return nid
         if ev.action == "isolate_leader":
@@ -355,6 +370,15 @@ class _ChaosRunner:
                 return self.on_hard_crash(c.hard_crash_from(e))
             fs.disarm()                     # nothing shipped in the budget
             return None
+        if ev.action == "replace_random_node":
+            ld = c.elect()
+            cands = [i for i in range(c.n)
+                     if c.nodes[i] is not None and i not in c.net.down
+                     and i not in getattr(c, "removed", ())
+                     and i in ld.voters and i != ld.nid]
+            victim = self.rng.choice(cands) if cands else ld.nid
+            new = c.replace_node(victim)
+            return {"victim": victim, "new": new}
         raise AssertionError(ev.action)
 
     def on_hard_crash(self, nid: Optional[int]) -> Optional[int]:
@@ -994,6 +1018,137 @@ def run_full_restart(workdir: str, seed: int = 0, crash_index: int = 60,
                 "violations": violations, "audit": audit,
                 "converged": converged, "faults": fs.counters(),
                 "recovered_ok": converged and not violations and not audit}
+    finally:
+        uninstall()
+        _close_engines(rec)
+
+
+def run_membership_crashpoint(workdir: str, seed: int = 0,
+                              crash_index: Optional[int] = None,
+                              mode: str = "torn", n: int = 3,
+                              engine: str = "nezha",
+                              n_ops: int = 12) -> dict:
+    """Crash-point probe of the config-change commit window: run the
+    scripted self-healing cycle (puts -> gc -> add learner -> promote ->
+    remove a founding voter -> more puts) with a FaultFS installed, kill
+    the WHOLE fleet at I/O op `crash_index` (None = record run: never
+    crash, report the window as result["member_window"]), recover from
+    the durable views, and audit.
+
+    Beyond run_full_restart's gates (no acked write lost, byte-equal
+    scans), this one proves the two membership-safety clauses across the
+    crash boundary: every live member converges on ONE committed config
+    (no two disjoint quorums), and merging the leadership histories of
+    the pre-crash and post-crash incarnations never shows two leaders
+    for one term."""
+    from repro.core.cluster import Cluster
+    from repro.core.faultfs import FaultFS, install, uninstall
+
+    fs = FaultFS(seed=seed)
+    install(fs)
+    cluster = rec = None
+    acked: List[Tuple[bytes, bytes]] = []
+    inflight = crash = None
+    window = [0, 0]
+    histories: List[Tuple[int, int]] = []
+    kw = dict(engine=engine, workdir=workdir, sync=True,
+              engine_kwargs={"gc_threshold": 4096})
+    try:
+        if crash_index is not None:
+            fs.arm(crash_index, scope=os.path.abspath(workdir) + os.sep,
+                   mode=mode)
+        try:
+            cluster = Cluster(n=n, seed=seed, **kw)
+            cluster.elect()
+            for j, key, val in _crashpoint_put_stream(n_ops):
+                inflight = (key, val)
+                cluster.put(key, val)
+                acked.append((key, val))
+                inflight = None
+            cluster.force_gc()          # sealed runs => catch-up has a
+            cluster.drain_shipping(2000)   # snapshot + run-ship path
+            window[0] = fs.op_count
+            new = cluster.add_node()
+            cluster.wait_promoted(new)
+            cluster.remove_node(1)      # retire a founding voter
+            window[1] = fs.op_count
+            for j, key, val in _crashpoint_put_stream(6):
+                val = _value(key, 100 + j, CRASHPOINT_VSIZE)
+                inflight = (key, val)
+                cluster.put(key, val)
+                acked.append((key, val))
+                inflight = None
+        except SimulatedCrash as e:
+            crash = e
+        if crash is None:
+            fs.disarm()
+        # pre-crash leadership evidence survives in the abandoned
+        # in-memory nodes; collect it before booting the recovery fleet
+        for nd in (cluster.nodes if cluster is not None else []):
+            if nd is not None:
+                histories.extend(nd.leadership_history)
+        changed = fs.materialize(os.path.abspath(workdir) + os.sep)
+        # recover=True sizes the fleet and the removed set from the
+        # cluster manifest; a node whose meta never made it to disk is
+        # rebuilt from its recorded construction config
+        rec = Cluster(n=n, seed=seed + 1, recover=True, **kw)
+        rec.elect()
+        rec.put(LIVENESS_KEY, b"alive")
+        if inflight is not None and \
+                rec.get(inflight[0], LINEARIZABLE) == inflight[1]:
+            acked.append(inflight)
+        # settle: every node the leader's config counts as a member must
+        # apply up to the leader's commit AND agree on the config — a
+        # stale non-member (e.g. the removed voter whose config entry
+        # never reached it) is ignored: it can neither vote nor win
+        for _ in range(12000):
+            ld = rec.leader()
+            if ld is not None:
+                members = set(ld.voters) | set(ld.learners)
+                live = [(i, nd) for i, nd in enumerate(rec.nodes)
+                        if nd is not None and i in members]
+                if live and all(nd.last_applied >= ld.commit_index and
+                                nd.voters == ld.voters
+                                for _, nd in live):
+                    break
+            rec.tick()
+        ld = rec.leader()
+        for nd in rec.nodes:
+            if nd is not None:
+                histories.extend(nd.leadership_history)
+        # election safety across the crash: one leader per term, ever
+        by_term: Dict[int, int] = {}
+        double: List[Tuple[int, List[int]]] = []
+        for term, nid in histories:
+            if term in by_term and by_term[term] != nid:
+                double.append((term, sorted((by_term[term], nid))))
+            by_term.setdefault(term, nid)
+        # one-quorum check: the members agree on one committed config
+        members = set(ld.voters) | set(ld.learners) if ld else set()
+        configs = {(nd.config_index, tuple(sorted(nd.voters)))
+                   for i, nd in enumerate(rec.nodes)
+                   if nd is not None and i in members}
+        one_config = len(configs) == 1
+        violations, audit = _verify_recovery(rec, acked)
+        lo, hi = _key(0), _key(CRASHPOINT_KEYS + 10)
+        scans = [rec.engines[i].scan(lo, hi)
+                 for i in (sorted(ld.voters) if ld else [])
+                 if i < len(rec.engines) and rec.engines[i] is not None]
+        converged = bool(scans) and all(s == scans[0] for s in scans[1:])
+        return {"seed": seed, "mode": mode, "crash_index": crash_index,
+                "ops": fs.op_count, "member_window": tuple(window),
+                "crashed": crash is not None,
+                "crash": None if crash is None else
+                {"op_index": crash.op_index, "kind": crash.kind,
+                 "path": os.path.basename(crash.path)},
+                "acked": len(acked), "files_settled": changed,
+                "violations": violations, "audit": audit,
+                "converged": converged, "one_config": one_config,
+                "double_leaders": double,
+                "voters": sorted(ld.voters) if ld else [],
+                "faults": fs.counters(),
+                "recovered_ok": converged and one_config and not double
+                and not violations and not audit}
     finally:
         uninstall()
         _close_engines(rec)

@@ -1,0 +1,450 @@
+"""Self-healing membership: single-server config changes, learners,
+live replacement.
+
+Load-bearing claims under test:
+
+  * Single-server changes only: a config entry is effective on append,
+    commits under its OWN quorum, at most one is in flight, and a
+    multi-voter jump is refused outright (adjacent configs must share a
+    majority, so there is never a moment two disjoint quorums exist).
+  * Learners replicate (InstallSnapshot + run shipping) but never vote,
+    never campaign, and never count toward any quorum; the leader
+    auto-promotes a learner once its applied index is within
+    promote_lag of the commit index.
+  * An uncommitted config entry rolls back when the log suffix holding
+    it is truncated — including across a restart, where the entry is
+    re-adopted from the durable log first and THEN truncated away.
+  * A removed node with a stale config can never win an election: live
+    voters answer its RequestVote with total silence (no term adoption),
+    so its runaway term cannot disturb the live quorum either.
+  * SimNet kills a removed address completely: queued mail is destroyed
+    (counted in dropped_msgs) and future mail in either direction drops.
+  * Client routing: reads pinned to a removed node raise
+    NodeRemovedError; session reads route around removed nodes.
+  * Cluster.replace_node restores the original voter count after a hard
+    kill, with the learner's catch-up bytes visible via Metrics.on_ship,
+    and the cluster manifest makes the healed shape recoverable.
+  * run_membership_crashpoint: killing the whole fleet at any I/O index
+    inside the config-change commit window recovers with no acked-write
+    loss, ONE committed config, and one leader per term across the
+    crash boundary.
+
+Every crash-sweep failure reproduces from {seed, crash_index, mode}
+alone — assertion messages carry the exact call to paste.
+"""
+import os
+
+import pytest
+
+from repro.core.client import LINEARIZABLE, NodeRemovedError
+from repro.core.cluster import Cluster
+from repro.core.raft import LEADER
+from repro.core.simnet import SimNet
+from repro.core.workload import (ChaosSchedule, FaultEvent, WorkloadSpec,
+                                 run_membership_crashpoint, run_workload)
+
+pytestmark = pytest.mark.membership
+
+MEMBER_SWEEP_N = int(os.environ.get("MEMBER_SWEEP_N", "36"))
+
+
+def _mk(tmp_path, sub="c", n=3, seed=5, **kw):
+    c = Cluster(n=n, engine="nezha", workdir=str(tmp_path / sub), seed=seed,
+                engine_kwargs={"gc_threshold": 4096}, **kw)
+    c.elect()
+    return c
+
+
+def _close(c):
+    for e in c.engines:
+        if e is not None:
+            e.close()
+
+
+def _settle(c, max_ticks=8000):
+    for _ in range(max_ticks):
+        ld = c.leader()
+        if ld is not None and all(
+                nd is None or nd.last_applied >= ld.commit_index
+                for i, nd in enumerate(c.nodes)
+                if i in (set(ld.voters) | set(ld.learners))):
+            return ld
+        c.tick()
+    raise TimeoutError("cluster never settled")
+
+
+# --------------------------------------------------------- happy path
+def test_add_promote_remove_cycle(tmp_path):
+    """Join a learner, watch catch-up promote it, retire a founder —
+    the config index advances once per change and data survives."""
+    c = _mk(tmp_path)
+    for i in range(30):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    c.force_gc()
+    c.drain_shipping(2000)
+    ship0 = sum(m.total_ship_bytes() for m in c.metrics)
+    new = c.add_node()
+    assert new == 3
+    ld = c.leader()
+    assert new in ld.learners and new not in ld.voters
+    assert c.wait_promoted(new)
+    ld = c.leader()
+    assert new in ld.voters and new not in ld.learners
+    # the learner caught up over the wire: snapshot and/or run shipping
+    assert sum(m.total_ship_bytes() for m in c.metrics) > ship0
+    c.remove_node(1)
+    ld = c.leader()
+    assert sorted(ld.voters) == [0, 2, 3]
+    assert 1 in c.removed and c.nodes[1] is None
+    for i in range(30, 45):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    assert len(c.scan(b"k", b"l")) == 45
+    ev = ld.metrics.membership_events
+    assert ev["promote"] >= 1 and ev["config_proposed"] >= 3
+    _close(c)
+
+
+def test_replace_node_after_hard_kill(tmp_path):
+    """The smoke-gate cycle: kill -9 a voter, replace it, quorum is back
+    at three voters and scans are byte-equal across the final voter set."""
+    c = _mk(tmp_path, seed=11)
+    for i in range(24):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    c.force_gc()
+    c.crash(1)
+    new = c.replace_node(1)
+    ld = c.leader()
+    assert sorted(ld.voters) == sorted({0, 2, new})
+    for i in range(24, 36):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    ld = _settle(c)
+    scans = [c.engines[i].scan(b"k", b"l") for i in sorted(ld.voters)]
+    assert all(s == scans[0] for s in scans[1:])
+    _close(c)
+
+
+def test_graceful_leader_self_removal_transfers_first(tmp_path):
+    """remove_node(leader) hands leadership off (TimeoutNow) before the
+    removal commits; the deposed id steps down and the history never
+    shows two leaders for one term."""
+    c = _mk(tmp_path, seed=3)
+    for i in range(10):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    old = c.elect().nid
+    c.remove_node(old)
+    ld = c.leader()
+    assert ld is not None and ld.nid != old
+    assert old not in ld.voters and old in c.removed
+    c.put(b"after", b"removal")
+    hist = []
+    for nd in c.nodes:
+        if nd is not None:
+            hist.extend(nd.leadership_history)
+    by_term = {}
+    for term, nid in hist:
+        assert by_term.setdefault(term, nid) == nid, \
+            f"two leaders for term {term}"
+    assert ld.metrics.membership_events.get("transfer", 0) + \
+        c.metrics[old].membership_events.get("transfer", 0) >= 1
+    _close(c)
+
+
+# ------------------------------------------------- config-change safety
+def test_reject_second_inflight_change(tmp_path):
+    """At most one config change in flight: a second proposal is refused
+    until the first commits, then accepted."""
+    c = _mk(tmp_path, auto_promote=False)
+    ld = c.leader()
+    idx = ld.propose_add_learner(3)
+    assert idx is not None and idx > ld.commit_index
+    assert ld.propose_remove(2) is None          # refused: one in flight
+    for _ in range(2000):
+        if ld.config_index <= ld.commit_index:
+            break
+        c.tick()
+    assert ld.config_index <= ld.commit_index
+    assert ld.propose_remove(2) is not None      # accepted once committed
+    _close(c)
+
+
+def test_multi_voter_jump_refused(tmp_path):
+    """Adjacent configs must differ by at most one voter — the overlap
+    argument that makes joint consensus unnecessary."""
+    c = _mk(tmp_path)
+    ld = c.leader()
+    with pytest.raises(ValueError):
+        ld.propose_config(voters=(0,), learners=())   # drops two at once
+    _close(c)
+
+
+def test_config_commits_under_its_own_quorum(tmp_path):
+    """Effective on append: a promote entry (3 voters -> 4) needs THREE
+    acks to commit.  With two voters down it must stall; reviving one
+    completes it — and any majority of {0,1,2,3} overlaps any majority
+    of {0,1,2}, so no split-brain window exists in between."""
+    c = _mk(tmp_path, auto_promote=False)
+    new = c.add_node()
+    c.crash(1)
+    c.crash(2)
+    ld = c.leader()
+    assert ld.propose_promote(new) is not None
+    c.tick(600)
+    assert ld.config_index > ld.commit_index     # 2 of 4 acks: stalled
+    assert new in ld.voters                      # ...but already in effect
+    c.restart(1)
+    for _ in range(4000):
+        if ld.config_index <= ld.commit_index:
+            break
+        c.tick()
+    assert ld.config_index <= ld.commit_index    # 3 of 4: committed
+    _close(c)
+
+
+def test_uncommitted_config_rolls_back_across_restart(tmp_path):
+    """An isolated leader appends a removal config (effective at once),
+    crashes, restarts (the durable log re-adopts the entry), and is then
+    truncated by the new leader — the config must roll back with the
+    suffix, on disk and in memory."""
+    c = _mk(tmp_path, seed=9, sync=True)
+    for i in range(6):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    old = c.elect()
+    onid = old.nid
+    c.isolate(onid)
+    assert old.propose_remove((onid + 1) % 3) is not None
+    assert len(old.voters) == 2                  # in effect immediately
+    c.tick(400)                                  # but never committed
+    assert old.config_index > old.commit_index
+    c.crash(onid)
+    # the survivors elect and commit new entries the stale suffix loses to
+    for _ in range(4000):
+        ld = c.leader()
+        if ld is not None and ld.nid != onid:
+            break
+        c.tick()
+    c.put(b"winner", b"entry")
+    c.restart(onid)
+    back = c.nodes[onid]
+    assert len(back.voters) == 2                 # durable log re-adopted it
+    c.heal()
+    for _ in range(6000):
+        if back.config_index <= back.commit_index and len(back.voters) == 3:
+            break
+        c.tick()
+    assert sorted(back.voters) == [0, 1, 2]      # rolled back with truncation
+    assert back.config_index == 0
+    _close(c)
+
+
+def test_partitioned_removed_node_cannot_win_election(tmp_path):
+    """A node removed while partitioned still holds the old 3-voter
+    config.  When it comes back it campaigns forever — and must be met
+    with total silence: it never wins, and its runaway term never
+    disturbs the live quorum (no term adoption on refusal)."""
+    c = _mk(tmp_path, seed=7)
+    for i in range(8):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    c.isolate(2)
+    zombie = c.nodes[2]
+    ld = c.leader()
+    for _ in range(4000):
+        if ld.propose_remove(2) is not None and \
+                ld.config_index <= ld.commit_index and 2 not in ld.voters:
+            break
+        c.tick()
+        ld = c.leader()
+    assert 2 not in ld.voters
+    assert sorted(zombie.voters) == [0, 1, 2]    # never saw its removal
+    term_before = ld.current_term
+    c.heal()                                     # let the zombie talk
+    for _ in range(3000):
+        c.tick()
+    assert zombie.role != LEADER
+    assert zombie.current_term > term_before     # it kept trying...
+    live = c.leader()
+    assert live.nid != 2
+    assert live.current_term == term_before      # ...and moved nothing
+    c.put(b"still", b"live")                     # quorum undisturbed
+    _close(c)
+
+
+def test_learner_never_counts_toward_quorum(tmp_path):
+    """Three voters + one learner: with two voters down the cluster must
+    refuse writes even though the learner is healthy and caught up."""
+    c = _mk(tmp_path, auto_promote=False)
+    new = c.add_node()
+    c.put(b"pre", b"crash")
+    c.crash(1)
+    c.crash(2)
+    with pytest.raises(TimeoutError):
+        c.put(b"no", b"quorum", max_ticks=400)
+    c.restart(1)                                 # 2 of 3 voters again
+    c.put(b"yes", b"quorum")
+    ld = c.leader()
+    assert new in ld.learners
+    _close(c)
+
+
+def test_learner_is_not_offered_votes_and_does_not_campaign(tmp_path):
+    c = _mk(tmp_path, auto_promote=False)
+    new = c.add_node()
+    lr = c.nodes[new]
+    c.kill_leader()
+    for _ in range(3000):
+        c.tick()
+        assert lr.role != LEADER
+        if c.leader() is not None:
+            break
+    assert c.leader() is not None                # voters elected around it
+    _close(c)
+
+
+# --------------------------------------------------------- substrate
+def test_simnet_removed_address_is_dead(tmp_path):
+    net = SimNet([0, 1, 2], seed=1)
+    for _ in range(5):
+        net.send(0, 2, "hello")
+    assert len(net._q[2]) == 5
+    d0 = net.dropped_msgs
+    net.remove_node(2)
+    assert net.dropped_msgs == d0 + 5            # queued mail destroyed
+    assert net._q[2] == []
+    net.send(0, 2, "late")                       # to the dead address
+    net.send(2, 0, "zombie")                     # and from it
+    assert net.dropped_msgs == d0 + 7
+    net.time += 100
+    assert net.deliver(2) == []
+    net.add_node(2)                              # a fresh joiner reuses it
+    net.send(0, 2, "fresh")
+    assert len(net._q[2]) == 1
+
+
+def test_health_report_shows_roles_and_config(tmp_path):
+    c = _mk(tmp_path, auto_promote=False)
+    new = c.add_node()
+    hr = c.health_report()
+    roles = {n["node"]: n["membership"] for n in hr["nodes"]}
+    assert roles[0] == roles[1] == roles[2] == "voter"
+    assert roles[new] == "learner"
+    assert hr["membership"]["learners"] == [new]
+    assert hr["net"]["removed"] == []
+    c.leader().auto_promote = True               # promotion is leader-driven
+    assert c.wait_promoted(new)
+    c.remove_node(0)
+    hr = c.health_report()
+    roles = {n["node"]: n["membership"] for n in hr["nodes"]}
+    assert roles[0] == "removed"
+    assert hr["membership"]["removed"] == [0]
+    assert 0 in hr["net"]["removed"]
+    assert hr["membership"]["config_index"] > 0
+    _close(c)
+
+
+def test_client_routing_around_removed_nodes(tmp_path):
+    """Pinned reads on a removed node fail fast with NodeRemovedError;
+    session reads silently re-route; the put retry loop keeps working
+    right through a membership change."""
+    c = _mk(tmp_path, seed=13)
+    s = c.session()
+    for i in range(12):
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    assert c.get(b"k0003", "session", session=s) == b"v0003"
+    c.remove_node(2)
+    with pytest.raises(NodeRemovedError):
+        c.get(b"k0003", node=2)
+    with pytest.raises(NodeRemovedError):
+        c.scan(b"k", b"l", node=2)
+    for i in range(12, 20):                      # puts retarget the leader
+        c.put(b"k%04d" % i, b"v%04d" % i)
+    assert c.get(b"k0015", "session", session=s) == b"v0015"
+    assert len(c.scan(b"k", b"l")) == 20
+    _close(c)
+
+
+def test_manifest_makes_healed_shape_recoverable(tmp_path):
+    """After replace_node, a polite shutdown + Cluster(recover=True)
+    boots the healed shape: the removed id stays removed, the new voter
+    comes back, and every acked write is readable."""
+    wd = str(tmp_path / "c")
+    c = Cluster(n=3, engine="nezha", workdir=wd, seed=2, sync=True,
+                engine_kwargs={"gc_threshold": 4096})
+    c.elect()
+    items = {b"k%04d" % i: b"v%04d" % i * 10 for i in range(16)}
+    for k, v in items.items():
+        c.put(k, v)
+    c.force_gc()
+    new = c.replace_node(1)
+    for k in list(items):
+        items[k + b"x"] = b"post"
+        c.put(k + b"x", b"post")
+    _settle(c)
+    _close(c)
+    rec = Cluster(n=c.n, engine="nezha", workdir=wd, seed=8, recover=True,
+                  engine_kwargs={"gc_threshold": 4096})
+    assert rec.removed == {1} and rec.nodes[1] is None
+    ld = rec.elect()
+    assert sorted(ld.voters) == sorted({0, 2, new})
+    rec.put(b"zz-liveness", b"alive")
+    for k, v in items.items():
+        assert rec.get(k) == v
+    rec.destroy()
+
+
+# ------------------------------------------------------------- chaos
+def test_chaos_replace_random_node_deterministic(tmp_path):
+    """The replace_random_node action heals mid-workload with zero
+    checker violations, and the same seed picks the same victim."""
+    def one(sub):
+        c = _mk(tmp_path, sub, seed=13)
+        sched = ChaosSchedule(
+            [FaultEvent(0.3, "replace_random_node", recovery=True)], seed=13)
+        rep = run_workload(c, WorkloadSpec(n_ops=120, n_keys=50, seed=13,
+                                           virtual_time=True), chaos=sched)
+        assert rep.violations == []
+        ld = c.leader()
+        assert len(ld.voters) == 3 and len(c.removed) == 1
+        _close(c)
+        return rep.timeline
+
+    a, b = one("a"), one("b")
+    assert a == b
+
+
+# --------------------------------------- config-change-window crashpoints
+def test_membership_record_run_is_deterministic(tmp_path):
+    a = run_membership_crashpoint(str(tmp_path / "a"), seed=5)
+    b = run_membership_crashpoint(str(tmp_path / "b"), seed=5)
+    assert not a["crashed"] and a["recovered_ok"], \
+        (a["violations"][:3], a["audit"][:3])
+    assert a["ops"] == b["ops"]
+    assert a["member_window"] == b["member_window"]
+    assert a["voters"] == [0, 2, 3]              # healed shape
+
+
+@pytest.mark.crashpoint
+def test_config_change_window_crashpoint_sweep(tmp_path):
+    """Kill the WHOLE fleet at >= MEMBER_SWEEP_N I/O indices spread
+    across the add-learner -> promote -> remove-voter window, cycling
+    torn/drop semantics.  Every recovery must keep every acked write,
+    converge byte-equal, agree on ONE committed config, and never show
+    two leaders for one term across the crash boundary."""
+    rec = run_membership_crashpoint(str(tmp_path / "record"), seed=5)
+    assert rec["recovered_ok"] and not rec["crashed"]
+    lo, hi = rec["member_window"]
+    assert hi - lo >= MEMBER_SWEEP_N, "window too narrow to sweep"
+    failures = []
+    for k in range(MEMBER_SWEEP_N):
+        ci = lo + (hi - lo) * k // MEMBER_SWEEP_N
+        mode = ("torn", "drop")[k % 2]
+        r = run_membership_crashpoint(str(tmp_path / f"p{k}"), seed=5,
+                                      crash_index=ci, mode=mode)
+        assert r["crashed"], f"crash index {ci} never fired"
+        if not r["recovered_ok"]:
+            failures.append((ci, mode, r["double_leaders"],
+                             r["violations"][:2], r["audit"][:2],
+                             r["converged"], r["one_config"]))
+    assert not failures, (
+        f"{len(failures)}/{MEMBER_SWEEP_N} config-window crash points "
+        f"failed: {failures[:4]} — reproduce any with "
+        f"run_membership_crashpoint(dir, seed=5, crash_index=CI, "
+        f"mode=MODE)")
