@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test smoke chaos crash heal bench bench-full
+.PHONY: test smoke chaos crash heal trace bench bench-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +24,12 @@ crash:
 # kill -9 at every sampled I/O index in the window)
 heal:
 	MEMBER_SWEEP_N=64 $(PY) -m pytest -q -m membership
+
+# end-to-end tracing suite + the persistence-waterfall figure (writes
+# benchmarks/BENCH_fig_trace.json and prints one put's waterfall)
+trace:
+	$(PY) -m pytest -q -m trace
+	$(PY) -m benchmarks.fig_trace
 
 bench:
 	$(PY) -m benchmarks.run

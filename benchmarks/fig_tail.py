@@ -48,6 +48,12 @@ def _cluster(seed: int, n_keys: int, vsize: int) -> Cluster:
                        "gc_batch": 128, "level_fanout": 2})
 
 
+def _q(h, q: float) -> float:
+    """Phase histograms can be legitimately empty (a fault window no op
+    landed in); quantile() raises on empty, so report 0.0 instead."""
+    return h.quantile(q) if h.n else 0.0
+
+
 def _fmt(rep, label: str) -> str:
     h = rep.hist.get(label)
     q = rep.queue_hist.get(label)
@@ -57,8 +63,8 @@ def _fmt(rep, label: str) -> str:
     return (f"n={h.n};p50_us={h.quantile(.5):.0f}"
             f";p99_us={h.quantile(.99):.0f}"
             f";p999_us={h.quantile(.999):.0f}"
-            f";queue_p99_us={q.quantile(.99):.0f}"
-            f";service_p99_us={s.quantile(.99):.0f}")
+            f";queue_p99_us={_q(q, .99):.0f}"
+            f";service_p99_us={_q(s, .99):.0f}")
 
 
 def _chaos_row(name, rep, seed):
@@ -67,14 +73,14 @@ def _chaos_row(name, rep, seed):
     steady = rep.merged("steady")
     fault = rep.merged("fault")
     rec = rep.merged("recovered")
-    base = max(steady.quantile(.99), 1.0)
-    ratio = rec.quantile(.99) / base
+    base = max(_q(steady, .99), 1.0)
+    ratio = _q(rec, .99) / base
     return (name, steady.mean(),
             f"violations={len(rep.violations)}"
             f";faults={len(rep.timeline)}"
-            f";steady_p99_us={steady.quantile(.99):.0f}"
-            f";fault_p99_us={fault.quantile(.99):.0f}"
-            f";recovered_p99_us={rec.quantile(.99):.0f}"
+            f";steady_p99_us={_q(steady, .99):.0f}"
+            f";fault_p99_us={_q(fault, .99):.0f}"
+            f";recovered_p99_us={_q(rec, .99):.0f}"
             f";p99_ratio={ratio:.2f}"
             f";refused={sum(rep.refused.values())}"
             f";achieved_rate={rep.achieved_rate:.0f}"

@@ -51,7 +51,16 @@ def smoke() -> int:
          on the wire (Metrics.on_ship); plus a 32-point fleet kill -9
          sweep across the config-change commit window that always
          recovers to ONE committed config with no acked-write loss and
-         never two leaders for one term.
+         never two leaders for one term,
+      9. tracing gate (fig_trace at smoke scale): a traced chaos run
+         (leader kill + lossy window) audits to ZERO causality
+         violations (durable-before-ack, quorum-before-commit,
+         commit-before-apply, apply-before-client-ack checked
+         structurally on the span/event stream); every synced nezha put
+         carries EXACTLY one value-log fsync on the leader critical
+         path; and the disabled tracer is free — the untraced same-seed
+         run has the identical SimNet trace and Metrics, within noise
+         on wall clock.
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
@@ -201,6 +210,14 @@ def smoke() -> int:
          f"points={hm_total};failures={hm_fail}"
          f";window={mlo}-{mhi}")
 
+    # tracing gate: causality audit + put critical path + zero-cost-off
+    from benchmarks import fig_trace
+    tr_rows = fig_trace.smoke_gate()
+    for name, us, derived in tr_rows:
+        show(name, us, derived)
+    tr = {name.split("/", 1)[-1]: common.parse_derived(d)
+          for name, _, d in tr_rows}
+
     ok = True
     if wa["nezha"] > wa["original"]:
         show("smoke/FAIL", 0, f"nezha_wa={wa['nezha']:.2f}_exceeds_"
@@ -276,6 +293,23 @@ def smoke() -> int:
         show("smoke/FAIL", 0, "config_window_sweep_failed_at_"
              f"{hm_fail}_of_{hm_total}_points_seed31")
         ok = False
+    if tr["chaos_audit"].get("causality_violations", 1) != 0:
+        show("smoke/FAIL", 0, "traced_chaos_run_broke_causality_x"
+             f"{tr['chaos_audit'].get('causality_violations', 1):.0f}")
+        ok = False
+    if tr["put_critical_path"].get("vlog_fsyncs_min", 0) != 1 or \
+            tr["put_critical_path"].get("vlog_fsyncs_max", 0) != 1:
+        show("smoke/FAIL", 0, "put_critical_path_not_one_vlog_fsync="
+             f"{tr['put_critical_path'].get('vlog_fsyncs_min')}-"
+             f"{tr['put_critical_path'].get('vlog_fsyncs_max')}")
+        ok = False
+    if tr["disabled_footprint"].get("sim_identical") != 1:
+        show("smoke/FAIL", 0, "tracer_install_perturbed_the_simulation")
+        ok = False
+    if tr["disabled_footprint"].get("wall_ratio", 99) > 2.5:
+        show("smoke/FAIL", 0, "tracing_overhead_unbounded_wall_ratio="
+             f"{tr['disabled_footprint'].get('wall_ratio', 99):.2f}")
+        ok = False
     if ok:
         show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
              f";original_wa={wa['original']:.2f}"
@@ -294,7 +328,12 @@ def smoke() -> int:
              f";full_restart_ok={int(fr['recovered_ok'])}"
              f";heal_voters={len(heal_voters)}"
              f";heal_ship_bytes={heal_ship}"
-             f";heal_crashpoints={hm_total}_all_recovered")
+             f";heal_crashpoints={hm_total}_all_recovered"
+             f";trace_violations="
+             f"{tr['chaos_audit'].get('causality_violations'):.0f}"
+             f";trace_vlog_fsyncs_per_put=1"
+             f";trace_wall_ratio="
+             f"{tr['disabled_footprint'].get('wall_ratio'):.2f}")
     common.write_artifact("smoke", rows)
     return 0 if ok else 1
 
@@ -313,7 +352,8 @@ def main() -> None:
     from benchmarks import (common, fig4_put, fig5_get, fig6_scan,
                             fig7_scan_length, fig8_ycsb, fig9_scalability,
                             fig10_gc_impact, fig11_recovery, fig12_batching,
-                            fig_reads, fig_runship, fig_tail, roofline)
+                            fig_reads, fig_runship, fig_tail, fig_trace,
+                            roofline)
 
     suites = {
         "fig4": lambda: fig4_put.run()[0],
@@ -328,6 +368,7 @@ def main() -> None:
         "fig_reads": fig_reads.run,
         "fig_runship": fig_runship.run,
         "fig_tail": fig_tail.run,
+        "fig_trace": fig_trace.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

@@ -1,0 +1,58 @@
+"""One traced put, end to end — the persistence waterfall, annotated.
+
+Runs a 3-node synced nezha cluster, traces a single put, and prints:
+
+  1. the cross-node span waterfall (client -> leader append+fsync ->
+     follower appends+fsyncs -> apply -> client ack), on virtual time;
+  2. the causality audit verdict (durable-before-ack, quorum-before-
+     commit, commit-before-apply, apply-before-client-ack);
+  3. the per-layer byte bill for the put, reconciled against Metrics;
+  4. a few lines of the Prometheus-style exposition the same run feeds.
+
+  PYTHONPATH=src python examples/trace_put.py
+"""
+import tempfile
+
+from repro.core import trace
+from repro.core.cluster import Cluster
+
+wd = tempfile.mkdtemp(prefix="trace_put_")
+c = Cluster(n=3, engine="nezha", workdir=wd, seed=7, sync=True,
+            engine_kwargs={"gc_threshold": 1 << 60})
+c.elect()
+c.put(b"warmup", b"x" * 64)          # settle the pipeline first
+
+print("== 1. one traced put ==")
+t = c.enable_tracing()
+idx = c.put(b"hello", b"world" * 40)
+for _ in range(100):                 # let the followers' applies drain
+    if all(nd.last_applied >= idx for nd in c.nodes if nd is not None):
+        break
+    c.tick()
+c.disable_tracing()
+(root,) = t.roots("put")
+print(trace.render_waterfall(t, root.sid))
+
+print("\n== 2. causality audit ==")
+violations = trace.audit(t.events)
+print(f"   {len(violations)} violations" +
+      ("" if not violations else ": " + "; ".join(violations)))
+
+print("\n== 3. the put's byte bill, by layer ==")
+for (op, cat), nbytes in sorted(t.io_sums(root.sid).items()):
+    n = sum(1 for s in t.subtree(root.sid)
+            if s.name == f"io.{op}" and s.tags.get("category") == cat)
+    print(f"   {op:<6} {cat:<10} {n:>3} ops  {nbytes:>6} bytes")
+ld = c.leader()
+vlog = [s for s in t.subtree(root.sid) if s.name == "io.fsync"
+        and s.node == ld.nid and s.tags["category"] == "valuelog"]
+print(f"   leader critical-path value-log fsyncs: {len(vlog)} "
+      "(the Raft log IS the ValueLog)")
+
+print("\n== 4. scrape (first lines) ==")
+for line in c.prometheus_text().splitlines():
+    if "fsyncs_total" in line or "repro_node_up" in line:
+        print("   " + line)
+
+c.destroy()
+print("OK")

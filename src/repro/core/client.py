@@ -42,6 +42,7 @@ from __future__ import annotations
 
 from typing import Iterable, List, Optional, Tuple
 
+from repro.core import trace as _trace
 from repro.core.raft import LEADER, RaftNode
 
 LINEARIZABLE = "linearizable"
@@ -126,7 +127,22 @@ class NezhaClient:
     def put(self, key: bytes, value: bytes, max_ticks: int = 2000) -> int:
         """Committed write through the current leader.  Leadership churn
         retries via a bounded LOOP — the old Cluster.put recursed here,
-        which meant unbounded stack depth under churny elections."""
+        which meant unbounded stack depth under churny elections.
+
+        Under an installed tracer this is a ROOT span: everything the put
+        causes — the leader's append+fsync, follower appends, the apply,
+        GC work piggybacked on post_op — hangs off it, across nodes."""
+        t = _trace._ACTIVE
+        sid = t.begin("put", kind="op",
+                      key=key.decode("utf-8", "replace")) \
+            if t is not None else None
+        try:
+            return self._put_locked(key, value, max_ticks, t, sid)
+        finally:
+            if sid is not None:
+                t.end(sid)
+
+    def _put_locked(self, key, value, max_ticks, t, sid) -> int:
         c = self.cluster
         for _ in range(self.put_attempts):
             ld = c.elect()
@@ -139,6 +155,9 @@ class NezhaClient:
                     for e in c.engines:
                         if e is not None:
                             e.post_op()
+                    if t is not None:
+                        t.event("client_ack", ld.nid, idx)
+                        t.tag(sid, index=idx, leader=ld.nid)
                     return idx
                 c.tick()
                 # a deposed leader may KEEP role=LEADER while partitioned;
@@ -165,6 +184,17 @@ class NezhaClient:
         instead of being silently counted as committed.  A chunk counts
         as done — and feeds `session`'s read-your-writes token — only when
         its OWN indexes are applied on the leader that assigned them."""
+        t = _trace._ACTIVE
+        sid = t.begin("put_many", kind="op") if t is not None else None
+        try:
+            return self._put_many_locked(items, window, max_ticks, batch,
+                                         session, t, sid)
+        finally:
+            if sid is not None:
+                t.end(sid)
+
+    def _put_many_locked(self, items, window, max_ticks, batch, session,
+                         t, sid) -> int:
         c = self.cluster
         ld = c.elect()
         if batch is None:
@@ -215,6 +245,8 @@ class NezhaClient:
                     # be counted — or resubmitted — twice)
                     ok = sum(1 for i in idxs if i <= applied)
                     done += ok
+                    if t is not None and ok:
+                        t.event("client_ack", ld.nid, idxs[ok - 1])
                     if session is not None and ok:
                         session.observe(idxs[ok - 1])
                     if ok < len(idxs):
@@ -234,32 +266,39 @@ class NezhaClient:
             session: Optional[Session] = None,
             node: Optional[int] = None) -> Optional[bytes]:
         return self._read(lambda eng: eng.get(key), consistency,
-                          session=session, node=node)
+                          session=session, node=node, op_name="get")
 
     def scan(self, lo: bytes, hi: bytes, consistency: Optional[str] = None,
              *, session: Optional[Session] = None,
              node: Optional[int] = None):
         return self._read(lambda eng: eng.scan(lo, hi), consistency,
-                          session=session, node=node)
+                          session=session, node=node, op_name="scan")
 
     def get_many(self, keys: List[bytes]) -> List[Optional[bytes]]:
         """Batched LINEARIZABLE gets: every key's ReadHandle is queued
         before the next tick, so ONE heartbeat-quorum round confirms the
         whole batch — N reads, 1 round (assertable via read_report)."""
         c = self.cluster
-        for _ in range(8):
-            nd = c.elect()
-            handles = [nd.read_index_submit() for _ in keys]
-            if any(h is None for h in handles):
-                continue
-            if self._await_handles(handles):
-                eng, m = c.engines[nd.nid], c.metrics[nd.nid]
-                out = []
-                for k in keys:
-                    m.on_read_tier(LINEARIZABLE)
-                    out.append(eng.get(k))
-                return out
-        raise StaleReadError("get_many: leadership never confirmed")
+        t = _trace._ACTIVE
+        sid = t.begin("get_many", kind="op", tier=LINEARIZABLE,
+                      n=len(keys)) if t is not None else None
+        try:
+            for _ in range(8):
+                nd = c.elect()
+                handles = [nd.read_index_submit() for _ in keys]
+                if any(h is None for h in handles):
+                    continue
+                if self._await_handles(handles):
+                    eng, m = c.engines[nd.nid], c.metrics[nd.nid]
+                    out = []
+                    for k in keys:
+                        m.on_read_tier(LINEARIZABLE)
+                        out.append(eng.get(k))
+                    return out
+            raise StaleReadError("get_many: leadership never confirmed")
+        finally:
+            if sid is not None:
+                t.end(sid)
 
     def _await_handles(self, handles) -> bool:
         """Tick until every ReadHandle is ready (True) or any aborts /
@@ -278,16 +317,24 @@ class NezhaClient:
         return False
 
     def _read(self, op, consistency: Optional[str], *,
-              session: Optional[Session], node: Optional[int]):
+              session: Optional[Session], node: Optional[int],
+              op_name: str = "read"):
         tier = consistency or \
             (SESSION if session is not None else self.default_consistency)
         if tier not in CONSISTENCY_LEVELS:
             raise ValueError(f"unknown consistency {tier!r}")
-        if tier == SESSION:
-            return self._read_session(op, session, node)
-        if tier == LEASE:
-            return self._read_lease(op, node)
-        return self._read_linearizable(op, node)
+        t = _trace._ACTIVE
+        sid = t.begin(op_name, kind="op", tier=tier) \
+            if t is not None else None
+        try:
+            if tier == SESSION:
+                return self._read_session(op, session, node)
+            if tier == LEASE:
+                return self._read_lease(op, node)
+            return self._read_linearizable(op, node)
+        finally:
+            if sid is not None:
+                t.end(sid)
 
     # ------------------------------------------------------- linearizable
     def _pinned(self, node: Optional[int]) -> Optional[RaftNode]:

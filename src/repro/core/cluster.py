@@ -24,6 +24,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import faultfs
+from repro.core import trace as _trace
 from repro.core.client import NezhaClient, Session
 from repro.core.engines import ENGINES, NezhaEngine
 from repro.core.faultfs import write_json_atomic
@@ -72,7 +73,7 @@ class Cluster:
         self.net = SimNet(list(range(n)), seed=seed, drop_prob=drop_prob)
         for r in self.removed:
             self.net.remove_node(r)
-        self.metrics: List[Metrics] = [Metrics() for _ in range(n)]
+        self.metrics: List[Metrics] = [Metrics(node=i) for i in range(n)]
         self.engines: List = [None] * n
         self.nodes: List[Optional[RaftNode]] = [None] * n
         self.leader_hint = leader_hint
@@ -179,6 +180,89 @@ class Cluster:
             # membership survives restart: persisted meta config as the
             # base, plus any KIND_CONFIG entries in the recovered log tail
             node.restore_config(cfg)
+            # a recovered node's durability predates the tracer's view of
+            # it — without these baseline events the causality auditor
+            # would flag its first post-restart ack as ack-before-durable
+            self._baseline_events(node)
+
+    def _baseline_events(self, node: RaftNode):
+        """Emit audit baseline for state that became durable/committed/
+        applied before (or outside) the tracer's window."""
+        t = _trace.active()
+        if t is None:
+            return
+        last = node.entries[-1].index if node.entries else node.snap_index
+        if last > 0:
+            t.event("durable", node.nid, last, baseline=True)
+        if node.commit_index > 0:
+            t.event("commit_learned", node.nid, node.commit_index,
+                    baseline=True)
+        if node.last_applied > 0:
+            t.event("apply", node.nid, node.last_applied, baseline=True)
+        if node.role == LEADER:
+            # seed the acked map: commits after a mid-run install may
+            # rest on match_index earned before the tracer was watching
+            for p, m in sorted(node.match_index.items()):
+                if p != node.nid and m > 0:
+                    t.event("ack_recv", node.nid, m, baseline=True,
+                            **{"from": p})
+
+    # --------------------------------------------------------------- tracing
+    def enable_tracing(self) -> "_trace.Tracer":
+        """Install a process-global virtual-time tracer driven by this
+        cluster's SimNet clock and seed it with baseline audit events for
+        every live node (state that became durable before the tracer
+        existed must not read as ack-before-durable).  Returns the
+        tracer; pair with disable_tracing()."""
+        t = _trace.Tracer(clock=lambda: self.net.time)
+        _trace.install(t)
+        for nd in self.nodes:
+            if nd is not None:
+                self._baseline_events(nd)
+        return t
+
+    def disable_tracing(self) -> Optional["_trace.Tracer"]:
+        t = _trace.active()
+        _trace.uninstall()
+        return t
+
+    def registry(self, reg: Optional["_trace.MetricsRegistry"] = None,
+                 ) -> "_trace.MetricsRegistry":
+        """Fill a labeled MetricsRegistry from every node's Metrics plus
+        cluster-level gauges (liveness, Raft progress, SimNet traffic) —
+        the structured successor to health_report()'s ad-hoc dicts."""
+        reg = reg if reg is not None else _trace.MetricsRegistry()
+        for i, m in enumerate(self.metrics):
+            m.fill_registry(reg, node=str(i))
+        up = reg.gauge("repro_node_up", "node is running and reachable",
+                       ["node"])
+        term = reg.gauge("repro_raft_term", "current raft term", ["node"])
+        commit = reg.gauge("repro_raft_commit_index",
+                           "highest committed log index", ["node"])
+        applied = reg.gauge("repro_raft_last_applied",
+                            "highest applied log index", ["node"])
+        for i, nd in enumerate(self.nodes):
+            alive = nd is not None and i not in self.net.down
+            up.labels(node=str(i)).set(1 if alive else 0)
+            if nd is not None:
+                term.labels(node=str(i)).set(nd.current_term)
+                commit.labels(node=str(i)).set(nd.commit_index)
+                applied.labels(node=str(i)).set(nd.last_applied)
+        sent = reg.counter("repro_net_msgs_total",
+                           "simnet messages by outcome", ["outcome"])
+        sent.labels(outcome="sent").inc(self.net.sent_msgs)
+        sent.labels(outcome="dropped").inc(self.net.dropped_msgs)
+        drops = reg.counter("repro_net_drops_total",
+                            "simnet drops by reason", ["reason"])
+        for reason, cnt in sorted(self.net.drop_reasons.items()):
+            drops.labels(reason=reason).inc(cnt)
+        return reg
+
+    def prometheus_text(self) -> str:
+        return self.registry().prometheus_text()
+
+    def scrape(self) -> dict:
+        return self.registry().scrape()
 
     # ---------------------------------------------------------------- time
     def tick(self, k: int = 1):
@@ -217,7 +301,7 @@ class Cluster:
         nid = self.n
         self.n += 1
         self.net.add_node(nid)
-        self.metrics.append(Metrics())
+        self.metrics.append(Metrics(node=nid))
         self.engines.append(None)
         self.nodes.append(None)
         self.elect()
@@ -436,6 +520,7 @@ class Cluster:
             "nodes": nodes,
             "net": {"sent_msgs": self.net.sent_msgs,
                     "dropped_msgs": self.net.dropped_msgs,
+                    "drop_reasons": dict(self.net.drop_reasons),
                     "drop_prob": self.net.drop_prob,
                     "down": sorted(self.net.down),
                     "removed": sorted(self.net.removed),
@@ -447,6 +532,7 @@ class Cluster:
                 "faultfs": (faultfs.active().counters()
                             if faultfs.active() is not None else None),
             },
+            "metrics": self.scrape(),
         }
 
     # --------------------------------------------------------------- faults

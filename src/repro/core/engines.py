@@ -115,6 +115,7 @@ import json
 import os
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
+from repro.core import trace as _trace
 from repro.core.cache import BlockCache
 from repro.core.faultfs import fs_open, write_json_atomic
 from repro.core.metrics import Metrics
@@ -655,17 +656,32 @@ class NezhaEngine(EngineBase):
         sealed output instead (a job already in flight when leadership is
         lost still drains; the new leader's fence/resync covers us)."""
         if self.gc_started and not self.gc_completed:
-            self.gc_step(self.gc_batch)
+            self._gc_unit("gc.flush", self.gc_step, self.gc_batch)
         elif self._merge is not None:
-            self.merge_step(self.gc_batch)
+            self._gc_unit("gc.merge", self.merge_step, self.gc_batch)
         elif not self._gc_allowed():
             return
         elif self.active.vlog.size >= self.gc_threshold:
-            self.start_gc()
+            self._gc_unit("gc.flush.start", self.start_gc)
         else:
             level = self.leveled.needs_merge()
             if level is not None:
-                self.start_level_merge(level)
+                self._gc_unit("gc.merge.start", self.start_level_merge,
+                              level)
+
+    def _gc_unit(self, name: str, fn, *args):
+        """Run one bounded GC slice, wrapped in a trace span when a tracer
+        is installed — GC interference shows up INSIDE the client op span
+        whose post_op hook paid for it."""
+        t = _trace._ACTIVE
+        if t is None:
+            fn(*args)
+            return
+        sid = t.begin(name, kind="gc", node=self.metrics.node)
+        try:
+            fn(*args)
+        finally:
+            t.end(sid)
 
     def _gc_allowed(self) -> bool:
         if not self.run_shipping:

@@ -44,6 +44,8 @@ import os
 import random
 from typing import Dict, List, Optional
 
+from repro.core import trace as _trace
+
 MODES = ("drop", "torn", "lost_rename")
 
 
@@ -360,6 +362,8 @@ def fs_fsync(f):
 
 def fs_fsync_path(path: str):
     """fsync a file by path (e.g. sealed run data before its meta commits)."""
+    if _trace._ACTIVE is not None:
+        _trace._ACTIVE.io("fsync_path", os.path.basename(path), 0)
     if _ACTIVE is not None:
         _ACTIVE.fsync(path)
         return
@@ -371,6 +375,8 @@ def fs_fsync_path(path: str):
 
 
 def fs_replace(src: str, dst: str):
+    if _trace._ACTIVE is not None:
+        _trace._ACTIVE.io("rename", os.path.basename(dst), 0)
     if _ACTIVE is not None:
         _ACTIVE.replace(src, dst)
     else:
@@ -386,6 +392,8 @@ def fs_remove(path: str):
 
 def fs_dirsync(dirpath: str):
     """fsync a directory: makes renames/creations inside it durable."""
+    if _trace._ACTIVE is not None:
+        _trace._ACTIVE.io("dirsync", os.path.basename(dirpath) or ".", 0)
     if _ACTIVE is not None:
         _ACTIVE.dirsync(dirpath)
         return

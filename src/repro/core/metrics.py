@@ -14,6 +14,8 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core import trace as _trace
+
 
 class LatencyHistogram:
     """HDR-style log-bucketed histogram: O(1) record, bounded relative
@@ -69,9 +71,15 @@ class LatencyHistogram:
 
     def quantile(self, q: float) -> float:
         """Nearest-rank quantile, reported as its bucket's upper edge
-        (>= the exact sample quantile, < one bucket above it)."""
+        (>= the exact sample quantile, < one bucket above it).
+
+        Raises ValueError on an empty histogram — an empty phase has no
+        p99, and silently reporting 0.0 once masked a mis-split phase
+        window as "latency dropped to zero"."""
         if self.n == 0:
-            return 0.0
+            raise ValueError(
+                "quantile(%r) of an empty histogram: no samples recorded "
+                "(check the phase window / label filter that built it)" % q)
         rank = max(1, math.ceil(q * self.n))
         cum = 0
         for idx in sorted(self.counts):
@@ -88,7 +96,11 @@ class LatencyHistogram:
         self.  Bucket-exact: merge(a, b) == histogram of a's and b's
         samples concatenated."""
         if (self.min_value, self.growth) != (other.min_value, other.growth):
-            raise ValueError("histogram geometries differ: cannot merge")
+            raise ValueError(
+                "histogram geometries differ: cannot merge "
+                "(min_value=%r, growth=%r) into (min_value=%r, growth=%r)"
+                % (other.min_value, other.growth,
+                   self.min_value, self.growth))
         for idx, cnt in other.counts.items():
             self.counts[idx] += cnt
         self.n += other.n
@@ -102,6 +114,9 @@ class LatencyHistogram:
         return out.merge(self)
 
     def summary(self) -> dict:
+        if self.n == 0:     # all-zero summary, explicit about emptiness
+            return {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                    "p99": 0.0, "p999": 0.0, "max": 0.0}
         return {"n": self.n, "mean": round(self.mean(), 3),
                 "p50": round(self.quantile(0.50), 3),
                 "p90": round(self.quantile(0.90), 3),
@@ -114,7 +129,7 @@ class LatencyHistogram:
 # and flat ints.  gc_cycle_log is summarized by length (gc_cycles).
 _SNAP_DICTS = ("write_bytes", "read_bytes", "write_ops", "read_ops",
                "cache_hits", "ship_bytes", "ship_ops", "read_tiers",
-               "fault_injections", "membership_events")
+               "fault_injections", "membership_events", "fsync_cats")
 _SNAP_INTS = ("fsyncs", "bloom_skips", "read_quorum_rounds",
               "follower_serves", "session_stalls")
 
@@ -126,6 +141,10 @@ class Metrics:
     write_ops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     read_ops: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     fsyncs: int = 0
+    # fsyncs by layer ('valuelog', 'wal', 'raft_log', ...): which store's
+    # durability sat on the critical path — the per-category counterpart
+    # of the flat `fsyncs` total (sum(fsync_cats.values()) == fsyncs)
+    fsync_cats: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     cache_hits: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
     bloom_skips: int = 0
     # replication traffic this node put on (or took off) the wire, by kind:
@@ -165,17 +184,28 @@ class Metrics:
     # {"kind": "flush"|"merge", "bytes": n, "level": l, "cycle": c} — so
     # "per-cycle compaction work stays bounded as data grows" is assertable.
     gc_cycle_log: List[dict] = field(default_factory=list)
+    # which cluster node this Metrics belongs to (None = standalone) —
+    # lets the tracer attribute I/O child spans to the node that did the
+    # I/O even when the enclosing span is a client-side root
+    node: Optional[int] = None
 
     def on_write(self, category: str, nbytes: int):
         self.write_bytes[category] += nbytes
         self.write_ops[category] += 1
+        if _trace._ACTIVE is not None:
+            _trace._ACTIVE.io("write", category, nbytes, node=self.node)
 
     def on_read(self, category: str, nbytes: int):
         self.read_bytes[category] += nbytes
         self.read_ops[category] += 1
+        if _trace._ACTIVE is not None:
+            _trace._ACTIVE.io("read", category, nbytes, node=self.node)
 
-    def on_fsync(self):
+    def on_fsync(self, category: str = "unlabeled"):
         self.fsyncs += 1
+        self.fsync_cats[category] += 1
+        if _trace._ACTIVE is not None:
+            _trace._ACTIVE.io("fsync", category, 0, node=self.node)
 
     def on_cache_hit(self, category: str):
         """A read served from the block cache: zero disk bytes."""
@@ -300,6 +330,7 @@ class Metrics:
             "write_ops": dict(self.write_ops),
             "read_ops": dict(self.read_ops),
             "fsyncs": self.fsyncs,
+            "fsync_cats": dict(self.fsync_cats),
             "cache_hits": dict(self.cache_hits),
             "bloom_skips": self.bloom_skips,
             "ship_bytes": dict(self.ship_bytes),
@@ -311,6 +342,63 @@ class Metrics:
             "membership_events": dict(self.membership_events),
             "latency": lat,
         }
+
+    # --------------------------------------------------- typed exposition
+    def fill_registry(self, reg: Optional["_trace.MetricsRegistry"] = None,
+                      **labels: str) -> "_trace.MetricsRegistry":
+        """Publish every counter into a labeled `MetricsRegistry`
+        (created if not given).  Extra `labels` (e.g. node="2") are
+        attached to every family, so a cluster can merge all of its
+        nodes' counters into one scrape — the typed replacement for
+        reading the ad-hoc dict fields directly."""
+        reg = reg or _trace.MetricsRegistry()
+        extra_names = tuple(sorted(labels))
+
+        def cat_counter(name, help, d, label="category"):
+            fam = reg.counter(name, help, extra_names + (label,))
+            for k in sorted(d):
+                fam.labels(**dict(labels, **{label: k})).inc(d[k])
+
+        def flat_counter(name, help, v):
+            reg.counter(name, help, extra_names).labels(**labels).inc(v)
+
+        cat_counter("repro_write_bytes_total", "bytes written by layer",
+                    self.write_bytes)
+        cat_counter("repro_read_bytes_total", "bytes read by layer",
+                    self.read_bytes)
+        cat_counter("repro_write_ops_total", "write ops by layer",
+                    self.write_ops)
+        cat_counter("repro_read_ops_total", "read ops by layer",
+                    self.read_ops)
+        cat_counter("repro_fsyncs_total", "fsyncs by layer",
+                    self.fsync_cats)
+        cat_counter("repro_cache_hits_total", "block-cache hits by layer",
+                    self.cache_hits)
+        cat_counter("repro_ship_bytes_total",
+                    "replication payload bytes by channel",
+                    self.ship_bytes, label="channel")
+        cat_counter("repro_reads_total", "client reads served by tier",
+                    self.read_tiers, label="tier")
+        cat_counter("repro_fault_injections_total",
+                    "injected faults by kind",
+                    self.fault_injections, label="kind")
+        cat_counter("repro_membership_events_total",
+                    "membership events by kind",
+                    self.membership_events, label="kind")
+        flat_counter("repro_bloom_skips_total",
+                     "point gets skipped via bloom filter",
+                     self.bloom_skips)
+        flat_counter("repro_read_quorum_rounds_total",
+                     "ReadIndex heartbeat-quorum rounds",
+                     self.read_quorum_rounds)
+        flat_counter("repro_follower_serves_total",
+                     "reads served by a non-leader", self.follower_serves)
+        flat_counter("repro_session_stalls_total",
+                     "session reads that waited for apply",
+                     self.session_stalls)
+        flat_counter("repro_gc_cycles_total", "completed GC work units",
+                     len(self.gc_cycle_log))
+        return reg
 
 
 class Stopwatch:

@@ -272,7 +272,7 @@ class MiniLSM:
         self._wal.flush()
         if self.sync:
             fs_fsync(self._wal)
-            self.metrics.on_fsync()
+            self.metrics.on_fsync("wal")
         self._wal_dirty = False
 
     def _truncate_wal(self):

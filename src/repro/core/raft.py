@@ -69,6 +69,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import trace as _trace
 from repro.core.simnet import SimNet
 from repro.core.valuelog import KIND_CONFIG, KIND_NOOP, KIND_PUT, LogEntry
 
@@ -109,6 +110,10 @@ class AppendEntries:
     # this round was SENT — which is exactly what ReadIndex confirmation
     # and lease renewal need.  0 = no round attached (legacy traffic).
     probe: int = 0
+    # trace context: span id of the newest client op whose entry rides in
+    # this batch (repro.core.trace), so follower-side durability work
+    # grafts onto the originating op's span tree.  0 = no context.
+    ctx: int = 0
 
 
 @dataclass
@@ -118,6 +123,7 @@ class AppendEntriesReply:
     match_index: int
     probe: int = 0    # echo of AppendEntries.probe
     applied: int = 0  # follower's last_applied — drives learner promotion
+    ctx: int = 0      # echo of AppendEntries.ctx (trace context)
 
 
 @dataclass
@@ -148,12 +154,14 @@ class InstallSnapshot:
     config_index: int = 0
     voters: Tuple[int, ...] = ()
     learners: Tuple[int, ...] = ()
+    ctx: int = 0      # trace context of the shipping leader's span
 
 
 @dataclass
 class InstallSnapshotReply:
     term: int
     match_index: int
+    ctx: int = 0      # echo of InstallSnapshot.ctx
 
 
 @dataclass
@@ -162,6 +170,7 @@ class TimeoutNow:
     voter to start an election immediately, stickiness notwithstanding."""
     term: int
     leader: int
+    ctx: int = 0      # trace context of the transfer decision
 
 
 @dataclass
@@ -479,6 +488,8 @@ class RaftNode:
                          KIND_CONFIG, b"", payload)
         off = self.store.append(entry)
         self.store.commit_window()           # durable before ack
+        if _trace._ACTIVE is not None:
+            _trace._ACTIVE.event("durable", self.nid, entry.index)
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
@@ -540,7 +551,10 @@ class RaftNode:
             to = max(cands, key=lambda p: (self.match_index.get(p, 0), -p))
         self._transfer_until = self.net.time + self.eto[0]
         self._abort_reads()                  # lease dies at send time
-        self.net.send(self.nid, to, TimeoutNow(self.current_term, self.nid))
+        t = _trace._ACTIVE
+        self.net.send(self.nid, to, TimeoutNow(
+            self.current_term, self.nid,
+            ctx=t.current() if t is not None else 0))
         if self.metrics is not None:
             self.metrics.on_membership("transfer")
         return to
@@ -553,7 +567,13 @@ class RaftNode:
         if self.role == LEADER or self.nid not in self.voters:
             return
         self._last_leader_contact = _NEVER   # the leader ASKED for this
+        t = _trace._ACTIVE
+        sid = t.begin("timeout_now", kind="raft", node=self.nid,
+                      parent=m.ctx,
+                      old_leader=src) if t is not None else None
         self._start_election(transfer=True)
+        if sid is not None:
+            t.end(sid)
 
     def _step_down(self):
         """We led a cluster we are no longer a voter of and the removal
@@ -675,8 +695,15 @@ class RaftNode:
             return None
         entry = LogEntry(self.current_term, self.last_log_index + 1,
                          KIND_PUT, key, value)
+        t = _trace._ACTIVE
+        sid = t.begin("raft.append", kind="raft", node=self.nid,
+                      index=entry.index) if t is not None else None
         off = self.store.append(entry)           # THE single persistence
         self.store.commit_window()               # durable before ack
+        if t is not None:
+            t.event("durable", self.nid, entry.index)
+            t.register_index(entry.index)
+            t.end(sid)
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
@@ -696,8 +723,17 @@ class RaftNode:
         for i, (key, value) in enumerate(items):
             entries.append(LogEntry(self.current_term, base + 1 + i,
                                     KIND_PUT, key, value))
+        t = _trace._ACTIVE
+        sid = t.begin("raft.append_batch", kind="raft", node=self.nid,
+                      n=len(entries)) if t is not None else None
         offs = self.store.append_batch(entries)  # ONE persistence pass
         self.store.commit_window()               # ONE fsync per store
+        if t is not None:
+            t.event("durable", self.nid, entries[-1].index if entries
+                    else base)
+            for e in entries:
+                t.register_index(e.index)
+            t.end(sid)
         self.entries.extend(entries)
         self.offsets.extend(offs)
         self.match_index[self.nid] = self.last_log_index
@@ -776,6 +812,8 @@ class RaftNode:
         self._term_start_index = entry.index
         off = self.store.append(entry)
         self.store.commit_window()
+        if _trace._ACTIVE is not None:
+            _trace._ACTIVE.event("durable", self.nid, entry.index)
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
@@ -806,9 +844,11 @@ class RaftNode:
             return False
         li, lt, payload = snap
         ci, cv, cl = self._config_at(li)
+        t = _trace._ACTIVE
         self.net.send(self.nid, peer, InstallSnapshot(
             self.current_term, self.nid, li, lt, payload,
-            config_index=ci, voters=cv, learners=cl))
+            config_index=ci, voters=cv, learners=cl,
+            ctx=t.current() if t is not None else 0))
         if self.shipper is not None:
             # the snapshot carries the whole current run set: skip the
             # peer's shipping cursor past every record it supersedes,
@@ -828,9 +868,12 @@ class RaftNode:
                 range(ni, min(self.last_log_index,
                               ni + self.max_batch - 1) + 1)]
         size = sum(len(e.key) + len(e.value) + 19 for e in ents)
+        t = _trace._ACTIVE
+        ctx = t.ctx_for_range(ents[0].index, ents[-1].index) \
+            if (t is not None and ents) else 0
         self.net.send(self.nid, peer, AppendEntries(
             self.current_term, self.nid, prev, self.term_at(prev), ents,
-            self.commit_index, probe=self._probe_seq), size=size)
+            self.commit_index, probe=self._probe_seq, ctx=ctx), size=size)
 
     def _handle(self, src: int, msg):
         if isinstance(msg, RequestVote):
@@ -935,8 +978,15 @@ class RaftNode:
                 start += 1
             else:
                 break
+        t = _trace._ACTIVE
         if start < len(m.entries):
             idx = m.prev_log_index + 1 + start
+            # graft this follower's durability work onto the originating
+            # op's span (m.ctx crossed the wire); ctx 0 (no originating
+            # client op — e.g. a no-op barrier) makes it a root span
+            sid = t.begin("follower.append", kind="raft", node=self.nid,
+                          parent=m.ctx, n=len(m.entries) - start,
+                          first=idx) if t is not None else None
             if idx <= self.last_log_index:
                 # conflict: truncate our log from idx, once
                 keep = idx - self.snap_index - 1
@@ -950,16 +1000,24 @@ class RaftNode:
             self.entries.extend(batch)
             self.offsets.extend(offs)
             self.store.commit_window()             # durable before the ack
+            if t is not None:
+                t.event("durable", self.nid, batch[-1].index)
+                t.end(sid)
             for e in batch:
                 if e.kind == KIND_CONFIG:          # effective on append
                     self._adopt_config_entry(e)
         idx = m.prev_log_index + len(m.entries)
         if m.leader_commit > self.commit_index:
             self.commit_index = min(m.leader_commit, self.last_log_index)
+            if t is not None:
+                t.event("commit_learned", self.nid, self.commit_index,
+                        leader=m.leader)
         self._apply_committed()
+        if t is not None:
+            t.event("ack_sent", self.nid, idx, to=src)
         self.net.send(self.nid, src, AppendEntriesReply(
             self.current_term, True, idx, probe=m.probe,
-            applied=self.last_applied))
+            applied=self.last_applied, ctx=m.ctx))
 
     def _on_append_reply(self, src: int, m: AppendEntriesReply):
         if m.term > self.current_term:
@@ -980,6 +1038,9 @@ class RaftNode:
                 self._refresh_lease()
             self._check_read_quorum()
         if m.success:
+            if _trace._ACTIVE is not None:
+                _trace._ACTIVE.event("ack_recv", self.nid, m.match_index,
+                                     **{"from": src})
             self.match_index[src] = max(self.match_index.get(src, 0),
                                         m.match_index)
             self.next_index[src] = self.match_index[src] + 1
@@ -1002,6 +1063,9 @@ class RaftNode:
                         if self.match_index.get(v, 0) >= n)
             if self._quorum(votes):
                 self.commit_index = n
+                if _trace._ACTIVE is not None:
+                    _trace._ACTIVE.event("commit", self.nid, n,
+                                         voters=sorted(self.voters))
                 break
         if self.role == LEADER and self.nid not in self.voters and \
                 self.config_index <= self.commit_index:
@@ -1010,6 +1074,7 @@ class RaftNode:
         self._apply_committed()
 
     def _apply_committed(self):
+        before = self.last_applied
         batch: List[Tuple[LogEntry, int]] = []
         while self.last_applied < self.commit_index:
             self.last_applied += 1
@@ -1020,7 +1085,17 @@ class RaftNode:
             if e.kind == KIND_PUT:
                 batch.append((e, off))
             self.applied_log.append((self.last_applied, e))
+        t = _trace._ACTIVE
         if batch:
+            sid = None
+            if t is not None:
+                # graft the apply under the newest originating op in the
+                # drain (cross-node: the registry is tracer-global)
+                sid = t.begin("apply", kind="apply", node=self.nid,
+                              parent=t.ctx_for_range(
+                                  batch[0][0].index,
+                                  batch[-1][0].index),
+                              n=len(batch))
             # whole drain applied as one group: engines coalesce the index
             # WAL records into one buffered write...
             if self.apply_batch_fn is not None:
@@ -1030,6 +1105,10 @@ class RaftNode:
                     self.apply_fn(e, off)
             # ...and ONE fsync for the window, not one per entry
             self.store.commit_window()
+            if sid is not None:
+                t.end(sid)
+        if t is not None and self.last_applied > before:
+            t.event("apply", self.nid, self.last_applied)
 
     # ----------------------------------------------------------- snapshot
     def repoint_offsets(self, new_offsets: Optional[Dict[int, int]]):
@@ -1071,18 +1150,25 @@ class RaftNode:
             if self.adopter is not None:
                 self.adopter.reset()
             self.net.send(self.nid, src, InstallSnapshotReply(
-                self.current_term, self.snap_index))
+                self.current_term, self.snap_index, ctx=m.ctx))
             return
         # Raft §7: when our log already holds the snapshot's last entry,
         # retain the suffix past it — a resync snapshot may lag entries we
         # have applied, and dropping them would regress the state machine
         keep_suffix = (m.last_index <= self.last_log_index and
                        self.term_at(m.last_index) == m.last_term)
+        t = _trace._ACTIVE
+        sid = t.begin("install_snapshot", kind="raft", node=self.nid,
+                      parent=m.ctx, last_index=m.last_index,
+                      keep_suffix=keep_suffix) if t is not None else None
         new_offsets = None
         if self.install_snapshot_fn is not None:
             new_offsets = self.install_snapshot_fn(m.last_index, m.last_term,
                                                    m.payload,
                                                    keep_tail=keep_suffix)
+        if t is not None:
+            t.event("snapshot_install", self.nid, m.last_index, leader=src)
+            t.end(sid)
         if self.adopter is not None:
             self.adopter.reset()   # the snapshot supersedes in-flight ships
         if keep_suffix:
@@ -1108,11 +1194,16 @@ class RaftNode:
         self.commit_index = max(self.commit_index, m.last_index)
         self.last_applied = max(self.last_applied, m.last_index)
         self.net.send(self.nid, src, InstallSnapshotReply(
-            self.current_term, m.last_index))
+            self.current_term, m.last_index, ctx=m.ctx))
 
     def _on_snapshot_reply(self, src: int, m: InstallSnapshotReply):
         if self.role != LEADER:
             return
+        if _trace._ACTIVE is not None:
+            # an installed snapshot is durable applied state: it counts
+            # as this peer's ack for everything through match_index
+            _trace._ACTIVE.event("ack_recv", self.nid, m.match_index,
+                                 **{"from": src})
         self.match_index[src] = max(self.match_index.get(src, 0),
                                     m.match_index)
         self.next_index[src] = self.match_index[src] + 1

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
+from repro.core import trace as _trace
 from repro.core.metrics import Metrics
 from repro.core.raft import LEADER, RaftNode, ShipRun, ShipRunReply
 
@@ -101,7 +102,9 @@ class RunShipper:
         self.epoch += 1
         pos = (node.current_term, self.epoch)
         nchunks = max(1, -(-len(data) // self.chunk_bytes))
-        rec = dict(rec, pos=pos, size=len(data), nchunks=nchunks)
+        t = _trace._ACTIVE
+        rec = dict(rec, pos=pos, size=len(data), nchunks=nchunks,
+                   ctx=t.current() if t is not None else 0)
         self.records.append((pos, rec, data))
         if len(self.records) > self.max_records:
             # a follower that still needs a trimmed record will trip the
@@ -296,19 +299,33 @@ class RunAdopter:
         node, eng = self.node, self.engine
         if node.last_applied < rec["last_index"]:
             return      # ordered behind AppendEntries: wait for apply
-        ok, new_offsets = eng.adopt_run(rec, data)
-        self.pending = None
-        if not ok:
-            self.awaiting_resync = True
-            self._reply(reply_to, tuple(rec["pos"]), 0, resync=True)
-            return
-        if rec["kind"] == "flush":
-            # the adopted run covers the log through last_index: compact
-            # the in-memory log like the leader did, then re-point the
-            # surviving tail at its rewritten vlog offsets
-            node.compact_to(rec["last_index"], rec["last_term"])
-            node.repoint_offsets(new_offsets)
-        self._reply(reply_to, tuple(rec["pos"]), rec["nchunks"])
+        t = _trace._ACTIVE
+        # graft onto the leader-side GC span that sealed the run (its id
+        # crossed the wire in the record); a ctx from a since-replaced
+        # tracer shows up as a flagged orphan, never silently dropped
+        sid = t.begin("adopt_run", kind="ship", node=node.nid,
+                      parent=rec.get("ctx", 0),
+                      level=rec.get("level"),
+                      last_index=rec["last_index"]) if t is not None else None
+        try:
+            ok, new_offsets = eng.adopt_run(rec, data)
+            if sid is not None:
+                t.tag(sid, ok=bool(ok))
+            self.pending = None
+            if not ok:
+                self.awaiting_resync = True
+                self._reply(reply_to, tuple(rec["pos"]), 0, resync=True)
+                return
+            if rec["kind"] == "flush":
+                # the adopted run covers the log through last_index:
+                # compact the in-memory log like the leader did, then
+                # re-point the surviving tail at its rewritten offsets
+                node.compact_to(rec["last_index"], rec["last_term"])
+                node.repoint_offsets(new_offsets)
+            self._reply(reply_to, tuple(rec["pos"]), rec["nchunks"])
+        finally:
+            if sid is not None:
+                t.end(sid)
 
     def _reply(self, dst: int, pos: Tuple[int, int], have: int,
                resync: bool = False):

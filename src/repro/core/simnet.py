@@ -12,15 +12,22 @@ Chaos-harness surface (repro/core/workload.py rides on all three):
     stream from (seed, tag), so a chaos schedule can draw randomness
     without perturbing the delivery sequence (same seed => same
     deliveries, with or without chaos consumers);
-  * delivery trace: `enable_trace()` records (time, dst, src, msg-type)
-    for every delivery — the replayable signature the chaos determinism
-    test compares across same-seed runs.
+  * message trace: `enable_trace()` records every send, drop (with the
+    reason — down node, removed address, partition, lossy window, crash
+    flush) and delivery — the replayable signature the chaos determinism
+    test compares across same-seed runs, and the feed that makes
+    `dropped_msgs` attributable (`drop_reasons`) instead of a bare
+    counter.  When a `repro.core.trace` tracer is installed the same
+    records flow into its `net_events` stream, time-aligned with spans.
 """
 from __future__ import annotations
 
 import heapq
 import random
+from collections import defaultdict
 from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import trace as _trace
 
 
 class SimNet:
@@ -41,14 +48,17 @@ class SimNet:
         # and -> drop probability (falls back to the net-wide defaults)
         self.link_delay: Dict[frozenset, Tuple[int, int]] = {}
         self.link_drop: Dict[frozenset, float] = {}
-        self.trace: Optional[List[Tuple[int, int, int, str]]] = None
+        self.trace: Optional[List[Tuple]] = None
         self.sent_msgs = 0
         self.sent_bytes = 0
         # every message the network discarded, whether refused at send time
         # (down / partitioned / lossy link) or destroyed in-flight by a
         # crash — the sender-visible signal that retry/resume logic (e.g.
-        # run-shipping chunk retransmission) must cover
+        # run-shipping chunk retransmission) must cover.  drop_reasons
+        # splits the total by cause: 'down' | 'removed' | 'partition' |
+        # 'lossy' | 'crash_flush' | 'removed_flush'.
         self.dropped_msgs = 0
+        self.drop_reasons: Dict[str, int] = defaultdict(int)
 
     def fork_rng(self, tag: str) -> random.Random:
         """Independent seeded stream derived from (seed, tag).  Chaos
@@ -57,8 +67,28 @@ class SimNet:
         return random.Random(f"{self.seed}:{tag}")
 
     def enable_trace(self):
-        """Start recording delivery order; see module docstring."""
+        """Start recording message order; see module docstring.  Records
+        are ("send"|"drop"|"deliver", time, dst, src, msg_type[, reason])
+        tuples — delivery records keep the historical (dst, src) order."""
         self.trace = []
+
+    def _record(self, kind: str, src: int, dst: int, msg: Any,
+                reason: Optional[str] = None):
+        name = type(msg).__name__
+        if self.trace is not None:
+            if reason is None:
+                self.trace.append((kind, self.time, dst, src, name))
+            else:
+                self.trace.append((kind, self.time, dst, src, name, reason))
+        t = _trace._ACTIVE
+        if t is not None:
+            t.net_event(kind, self.time, src, dst, name, reason)
+
+    def _drop(self, src: int, dst: int, msg: Any, reason: str):
+        self.dropped_msgs += 1
+        self.drop_reasons[reason] += 1
+        if self.trace is not None or _trace._ACTIVE is not None:
+            self._record("drop", src, dst, msg, reason)
 
     # ------------------------------------------------------ link injection
     def set_link(self, a: int, b: int, *,
@@ -98,23 +128,26 @@ class SimNet:
         future mail is destroyed (counted in dropped_msgs) so a zombie
         node can neither receive stale RPCs nor inject new ones."""
         self.removed.add(nid)
-        self.dropped_msgs += len(self._q.get(nid, []))
+        for _, _, src, msg in self._q.get(nid, ()):
+            self._drop(src, nid, msg, "removed_flush")
         if nid in self._q:
             self._q[nid].clear()
 
     # ------------------------------------------------------------ transport
     def send(self, src: int, dst: int, msg: Any, size: int = 0):
-        if src in self.down or dst in self.down or \
-                src in self.removed or dst in self.removed:
-            self.dropped_msgs += 1
+        if src in self.removed or dst in self.removed:
+            self._drop(src, dst, msg, "removed")
+            return
+        if src in self.down or dst in self.down:
+            self._drop(src, dst, msg, "down")
             return
         pair = frozenset((src, dst))
         if pair in self.blocked:
-            self.dropped_msgs += 1
+            self._drop(src, dst, msg, "partition")
             return
         p = self.link_drop.get(pair, self.drop_prob)
         if p and self.rng.random() < p:
-            self.dropped_msgs += 1
+            self._drop(src, dst, msg, "lossy")
             return
         lo, hi = self.link_delay.get(pair, (self.min_delay, self.max_delay))
         delay = self.rng.randint(lo, hi)
@@ -126,6 +159,8 @@ class SimNet:
                        (self.time + delay, self._seq, src, msg))
         self.sent_msgs += 1
         self.sent_bytes += size
+        if self.trace is not None or _trace._ACTIVE is not None:
+            self._record("send", src, dst, msg)
 
     def deliver(self, nid: int) -> List[Tuple[int, Any]]:
         if nid in self.down or nid in self.removed:
@@ -134,8 +169,8 @@ class SimNet:
         q = self._q.get(nid, [])
         while q and q[0][0] <= self.time:
             _, _, src, msg = heapq.heappop(q)
-            if self.trace is not None:
-                self.trace.append((self.time, nid, src, type(msg).__name__))
+            if self.trace is not None or _trace._ACTIVE is not None:
+                self._record("deliver", src, nid, msg)
             out.append((src, msg))
         return out
 
@@ -155,7 +190,8 @@ class SimNet:
         self.down.add(nid)
         q = self._q.get(nid)
         if q:
-            self.dropped_msgs += len(q)   # in-flight mail vanishes
+            for _, _, src, msg in q:      # in-flight mail vanishes
+                self._drop(src, nid, msg, "crash_flush")
             q.clear()
 
     def restart(self, nid: int):

@@ -110,7 +110,7 @@ class ValueLog:
         self._f.flush()
         if self.sync:
             fs_fsync(self._f)
-            self.metrics.on_fsync()
+            self.metrics.on_fsync(self.category)
         self._dirty = False
 
     def flush(self):

@@ -70,6 +70,7 @@ from dataclasses import asdict, dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core import faultfs
+from repro.core import trace as _trace
 from repro.core.client import (LEASE, LINEARIZABLE, SESSION, Session,
                                StaleReadError)
 from repro.core.faultfs import SimulatedCrash
@@ -278,6 +279,12 @@ class _ChaosRunner:
             detail = self._apply(ev)
             self.timeline.append({"op": op_index, "action": ev.action,
                                   "detail": detail})
+            if _trace._ACTIVE is not None:
+                # annotation only: audit() ignores the "fault" kind, but
+                # the exported event stream shows WHEN each fault landed
+                # relative to the spans it perturbed
+                _trace._ACTIVE.event("fault", -1, 0, action=ev.action,
+                                     op=op_index, detail=detail)
             if self.phase == "steady":
                 self.phase = "fault"
             if ev.recovery:

@@ -140,13 +140,31 @@ def test_hist_merge_equals_concatenation(xs, ys):
     assert dict(ha.counts) == dict(hcat.counts)
     assert ha.n == hcat.n and ha.total == hcat.total
     assert ha.max_seen == hcat.max_seen
+    if ha.n == 0:
+        # both inputs empty: quantile refuses rather than inventing 0
+        with pytest.raises(ValueError):
+            ha.quantile(0.5)
+        return
     for q in (0.5, 0.99, 0.999):
         assert ha.quantile(q) == hcat.quantile(q)
 
 
+def test_hist_quantile_empty_raises():
+    h = LatencyHistogram()
+    with pytest.raises(ValueError, match="empty histogram"):
+        h.quantile(0.99)
+    # summary() stays total: all-zero digest, explicit n=0
+    assert h.summary() == {"n": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                           "p99": 0.0, "p999": 0.0, "max": 0.0}
+
+
 def test_hist_merge_rejects_geometry_mismatch():
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError) as ei:
         LatencyHistogram(min_value=0.1).merge(LatencyHistogram(min_value=1))
+    # the message names BOTH geometries so the mismatch is debuggable
+    assert "min_value=1" in str(ei.value) and "min_value=0.1" in str(ei.value)
+    with pytest.raises(ValueError, match="growth"):
+        LatencyHistogram(growth=1.5).merge(LatencyHistogram(growth=2.0))
 
 
 # ------------------------------------------------- checker self-test
