@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test smoke chaos crash heal trace bench bench-full
+.PHONY: test smoke chaos crash heal trace shard bench bench-full
 
 test:
 	$(PY) -m pytest -x -q
@@ -30,6 +30,13 @@ heal:
 trace:
 	$(PY) -m pytest -q -m trace
 	$(PY) -m benchmarks.fig_trace
+
+# multi-Raft sharded keyspace suite + the shard-scaling figure (writes
+# BENCH_fig_shard.json: put throughput at 1/2/4 shards, scatter-gather
+# scan equality, one-shard chaos leg)
+shard:
+	$(PY) -m pytest -q -m shard
+	$(PY) -m benchmarks.fig_shard
 
 bench:
 	$(PY) -m benchmarks.run

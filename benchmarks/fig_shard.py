@@ -1,0 +1,173 @@
+"""Shard-scaling: put throughput vs number of Raft groups.
+
+The single-group baseline serializes every put through one leader — one
+log, one fsync pipeline, one replication window — so adding replicas
+does NOT add write throughput (the n=3 vs n=5 baseline rows are flat;
+a wider quorum is, if anything, slower).  The sharded fabric
+(repro/core/shards.py) splits the keyspace into N independent Raft
+groups over one SimNet and the sharded client keeps every group's
+in-flight window full in the SAME tick loop, so N commit pipelines
+(append + fsync + replication round) overlap in virtual time and put
+throughput scales with N.
+
+Measurement follows the PR 7 convention: the gate metric is VIRTUAL
+throughput — ops per simulated second (SimNet ticks x tick_us) — a pure
+function of {seed, schedule} that container noise cannot move; wall
+clock is reported alongside for information only (one Python process
+simulates all shards, so wall time grows with total work regardless of
+scaling).
+
+Also here: the cross-shard scatter-gather scan check (stitched result
+byte-equal to an unsharded reference store over identical data) and the
+per-group chaos leg (one shard's leader killed mid-workload, zero
+checked-history violations).  smoke_gate() is CI gate #10.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks import common
+from repro.core.client import LINEARIZABLE
+from repro.core.cluster import Cluster
+from repro.core.shards import ShardMap, ShardedCluster
+from repro.core.workload import (ChaosSchedule, Tenant, WorkloadSpec,
+                                 run_workload, _key)
+
+N_ITEMS = 6000 if common.FULL else 1600
+VSIZE = 128
+WINDOW = 64
+TICK_US = 50.0      # same virtual-time scale the workload harness uses
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _sharded(n_shards: int, keys, seed: int = 7,
+             n: int = 3) -> ShardedCluster:
+    wd = tempfile.mkdtemp(prefix=f"bench_shard{n_shards}_")
+    sc = ShardedCluster(n_shards=n_shards, n=n, engine="nezha",
+                        workdir=wd, seed=seed,
+                        shard_map=ShardMap.from_keys(keys, n_shards))
+    sc.elect()
+    return sc
+
+
+def _vthroughput(cluster, items) -> tuple:
+    """(virtual ops/s, wall ops/s, done) for one put_many over items."""
+    t0 = cluster.net.time
+    w0 = time.perf_counter()
+    done = cluster.put_many(items, window=WINDOW)
+    wall = time.perf_counter() - w0
+    dticks = max(cluster.net.time - t0, 1)
+    vops = done / (dticks * TICK_US * 1e-6)
+    return vops, done / max(wall, 1e-9), done
+
+
+def scaling(n_items: int = N_ITEMS) -> list:
+    """Put throughput at 1 / 2 / 4 shards over identical items."""
+    items = common.keys_values(n_items, VSIZE)
+    keys = [k for k, _ in items]
+    rows = []
+    base_vops = None
+    for s in SHARD_COUNTS:
+        sc = _sharded(s, keys)
+        vops, wops, done = _vthroughput(sc, items)
+        if base_vops is None:
+            base_vops = vops
+        rows.append((f"fig_shard_puts/shards={s}", 1e6 / max(wops, 1e-9),
+                     f"items={done};vops_s={vops:.0f}"
+                     f";wall_ops_s={wops:.0f}"
+                     f";scaling_x={vops / base_vops:.2f}"))
+        sc.destroy()
+    return rows
+
+
+def baseline_flat(n_items: int = N_ITEMS) -> list:
+    """Control: a single Raft group does NOT scale writes with replicas."""
+    items = common.keys_values(n_items, VSIZE)
+    rows = []
+    base_vops = None
+    for n in (3, 5):
+        wd = tempfile.mkdtemp(prefix=f"bench_shard_base{n}_")
+        c = Cluster(n=n, engine="nezha", workdir=wd, seed=7)
+        c.elect()
+        vops, wops, done = _vthroughput(c, items)
+        if base_vops is None:
+            base_vops = vops
+        rows.append((f"fig_shard_baseline/n={n}",
+                     1e6 / max(wops, 1e-9),
+                     f"items={done};vops_s={vops:.0f}"
+                     f";scaling_x={vops / base_vops:.2f}"))
+        common.destroy(c)
+    return rows
+
+
+def scan_equality(n_items: int = 600) -> tuple:
+    """Cross-shard scatter-gather scan == unsharded reference, bytewise."""
+    items = common.keys_values(n_items, VSIZE)
+    keys = [k for k, _ in items]
+    sc = _sharded(4, keys, seed=9)
+    sc.put_many(items, window=WINDOW)
+    wd = tempfile.mkdtemp(prefix="bench_shard_ref_")
+    ref = Cluster(n=3, engine="nezha", workdir=wd, seed=9)
+    ref.elect()
+    ref.put_many(items, window=WINDOW)
+    got = sc.scan(keys[0], keys[-1], LINEARIZABLE)
+    exp = ref.scan(keys[0], keys[-1], LINEARIZABLE)
+    equal = int(got == exp and len(got) == n_items)
+    touched = len(list(sc.shard_map.shards_for_range(keys[0], keys[-1])))
+    sc.destroy()
+    common.destroy(ref)
+    return ("fig_shard_scan/scatter_gather", 0.0,
+            f"items={n_items};shards_touched={touched}"
+            f";scan_equal={equal}")
+
+
+def chaos_one_shard(n_ops: int = 160) -> tuple:
+    """Kill ONE shard's leader under the checked workload: the other
+    shards keep serving and the history audits clean."""
+    n_keys = max(n_ops, 120)
+    keys = [_key(i) for i in range(n_keys)]
+    wd = tempfile.mkdtemp(prefix="bench_shard_chaos_")
+    sc = ShardedCluster(n_shards=4, n=3, engine="nezha", workdir=wd,
+                        seed=13, shard_map=ShardMap.from_keys(keys, 4))
+    sc.elect()
+    spec = WorkloadSpec(n_ops=n_ops, n_keys=n_keys, vsize=128, seed=3,
+                        virtual_time=True, tick_us=TICK_US,
+                        tenants=(Tenant("lin", 1.0, "A", LINEARIZABLE),))
+    sched = ChaosSchedule.kill_and_recover(at=0.3, restart_at=0.7,
+                                           seed=3, group=1)
+    rep = run_workload(sc, spec, chaos=sched)
+    groups_hit = sorted({e.get("group") for e in rep.timeline})
+    sc.destroy()
+    return ("fig_shard_chaos/kill_group1", 0.0,
+            f"ops={n_ops};violations={len(rep.violations)}"
+            f";faults={len(rep.timeline)}"
+            f";groups_hit={'|'.join(map(str, groups_hit))}")
+
+
+def smoke_gate() -> list:
+    """CI gate #10 (benchmarks/run.py smoke()): N=4 shards scale puts
+    >= 2x over 1 shard (virtual throughput), the cross-shard scan is
+    byte-equal to the unsharded reference, and one shard's leader kill
+    leaves zero violations."""
+    rows = scaling(n_items=800)
+    rows.append(scan_equality(n_items=400))
+    rows.append(chaos_one_shard(n_ops=120))
+    return [(name.replace("fig_shard", "smoke_shard"), us, derived)
+            for name, us, derived in rows]
+
+
+def run() -> list:
+    rows = scaling()
+    rows += baseline_flat()
+    rows.append(scan_equality())
+    rows.append(chaos_one_shard())
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    common.emit(rows)
+    path = common.write_artifact("fig_shard", rows)
+    import sys
+    print(f"# wrote {path}", file=sys.stderr)

@@ -60,7 +60,15 @@ def smoke() -> int:
          carries EXACTLY one value-log fsync on the leader critical
          path; and the disabled tracer is free — the untraced same-seed
          run has the identical SimNet trace and Metrics, within noise
-         on wall clock.
+         on wall clock,
+     10. sharding gate (fig_shard at smoke scale): N=4 range shards —
+         each its own Raft group over one SimNet — scale put throughput
+         >= 2x over the 1-shard fabric and monotonically 1 -> 2 -> 4
+         (virtual ops per simulated second, seed-deterministic), the
+         cross-shard scatter-gather scan is byte-equal to an unsharded
+         reference store over identical data, and a seeded kill of ONE
+         shard's leader leaves zero history violations while the other
+         shards keep serving.
     Returns 0 on pass, 1 on fail (wired into `make smoke` / pytest -m smoke).
     """
     from benchmarks import common
@@ -218,6 +226,14 @@ def smoke() -> int:
     tr = {name.split("/", 1)[-1]: common.parse_derived(d)
           for name, _, d in tr_rows}
 
+    # sharding gate: multi-Raft scaling + scatter-gather + per-group chaos
+    from benchmarks import fig_shard
+    sh_rows = fig_shard.smoke_gate()
+    for name, us, derived in sh_rows:
+        show(name, us, derived)
+    sh = {name.split("/", 1)[-1]: common.parse_derived(d)
+          for name, _, d in sh_rows}
+
     ok = True
     if wa["nezha"] > wa["original"]:
         show("smoke/FAIL", 0, f"nezha_wa={wa['nezha']:.2f}_exceeds_"
@@ -310,6 +326,28 @@ def smoke() -> int:
         show("smoke/FAIL", 0, "tracing_overhead_unbounded_wall_ratio="
              f"{tr['disabled_footprint'].get('wall_ratio', 99):.2f}")
         ok = False
+    if sh["shards=4"].get("scaling_x", 0) < 2.0:
+        show("smoke/FAIL", 0, "sharding_4x_fabric_scaled_puts_only_"
+             f"{sh['shards=4'].get('scaling_x', 0):.2f}x_over_1_shard")
+        ok = False
+    if not (sh["shards=1"].get("vops_s", 0)
+            < sh["shards=2"].get("vops_s", 0)
+            < sh["shards=4"].get("vops_s", 0)):
+        show("smoke/FAIL", 0, "shard_scaling_not_monotonic_vops="
+             f"{sh['shards=1'].get('vops_s', 0):.0f}->"
+             f"{sh['shards=2'].get('vops_s', 0):.0f}->"
+             f"{sh['shards=4'].get('vops_s', 0):.0f}")
+        ok = False
+    if sh["scatter_gather"].get("scan_equal") != 1:
+        show("smoke/FAIL", 0, "cross_shard_scan_diverged_from_unsharded_"
+             "reference")
+        ok = False
+    if sh["kill_group1"].get("violations", 1) != 0 or \
+            sh["kill_group1"].get("faults", 0) < 2:
+        show("smoke/FAIL", 0, "one_shard_leader_kill_violations="
+             f"{sh['kill_group1'].get('violations', 1):.0f}_faults="
+             f"{sh['kill_group1'].get('faults', 0):.0f}")
+        ok = False
     if ok:
         show("smoke/PASS", 0, f"nezha_wa={wa['nezha']:.2f}"
              f";original_wa={wa['original']:.2f}"
@@ -333,7 +371,11 @@ def smoke() -> int:
              f"{tr['chaos_audit'].get('causality_violations'):.0f}"
              f";trace_vlog_fsyncs_per_put=1"
              f";trace_wall_ratio="
-             f"{tr['disabled_footprint'].get('wall_ratio'):.2f}")
+             f"{tr['disabled_footprint'].get('wall_ratio'):.2f}"
+             f";shard_scaling_x={sh['shards=4'].get('scaling_x', 0):.2f}"
+             f";shard_scan_equal={sh['scatter_gather'].get('scan_equal'):.0f}"
+             f";shard_chaos_violations="
+             f"{sh['kill_group1'].get('violations'):.0f}")
     common.write_artifact("smoke", rows)
     return 0 if ok else 1
 
@@ -352,8 +394,8 @@ def main() -> None:
     from benchmarks import (common, fig4_put, fig5_get, fig6_scan,
                             fig7_scan_length, fig8_ycsb, fig9_scalability,
                             fig10_gc_impact, fig11_recovery, fig12_batching,
-                            fig_reads, fig_runship, fig_tail, fig_trace,
-                            roofline)
+                            fig_reads, fig_runship, fig_shard, fig_tail,
+                            fig_trace, roofline)
 
     suites = {
         "fig4": lambda: fig4_put.run()[0],
@@ -367,6 +409,7 @@ def main() -> None:
         "fig12": fig12_batching.run,
         "fig_reads": fig_reads.run,
         "fig_runship": fig_runship.run,
+        "fig_shard": fig_shard.run,
         "fig_tail": fig_tail.run,
         "fig_trace": fig_trace.run,
         "roofline": roofline.run,

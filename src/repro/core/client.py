@@ -156,8 +156,8 @@ class NezhaClient:
                         if e is not None:
                             e.post_op()
                     if t is not None:
-                        t.event("client_ack", ld.nid, idx)
-                        t.tag(sid, index=idx, leader=ld.nid)
+                        t.event("client_ack", ld.addr, idx)
+                        t.tag(sid, index=idx, leader=ld.addr)
                     return idx
                 c.tick()
                 # a deposed leader may KEEP role=LEADER while partitioned;
@@ -246,7 +246,7 @@ class NezhaClient:
                     ok = sum(1 for i in idxs if i <= applied)
                     done += ok
                     if t is not None and ok:
-                        t.event("client_ack", ld.nid, idxs[ok - 1])
+                        t.event("client_ack", ld.addr, idxs[ok - 1])
                     if session is not None and ok:
                         session.observe(idxs[ok - 1])
                     if ok < len(idxs):
@@ -343,7 +343,9 @@ class NezhaClient:
             raise NodeRemovedError(
                 f"node {node} was removed from the cluster membership")
         nd = self.cluster.nodes[node] if node is not None else None
-        if node is not None and (nd is None or node in self.cluster.net.down):
+        if node is not None and (nd is None or
+                                 self.cluster.addr(node) in
+                                 self.cluster.net.down):
             raise StaleReadError(f"node {node} is down")
         return nd
 
@@ -398,7 +400,8 @@ class NezhaClient:
             candidates = [(self._rr + k) % n for k in range(n)]
         removed = getattr(c, "removed", ())
         candidates = [nid for nid in candidates
-                      if c.nodes[nid] is not None and nid not in c.net.down
+                      if c.nodes[nid] is not None
+                      and c.addr(nid) not in c.net.down
                       and nid not in removed]
 
         def serve(nid, stalled):

@@ -42,7 +42,9 @@ class Cluster:
                  drop_prob: float = 0.0, lease_ticks: Optional[int] = None,
                  default_consistency: str = "linearizable",
                  recover: bool = False, promote_lag: int = 16,
-                 auto_promote: bool = True):
+                 auto_promote: bool = True,
+                 group: Optional[int] = None,
+                 net: Optional[SimNet] = None):
         self.engine_name = engine
         self.workdir = workdir
         self.seed = seed
@@ -70,10 +72,27 @@ class Cluster:
                 self._construct_cfg = {int(k): dict(v) for k, v in
                                        man.get("configs", {}).items()}
         self.n = n
-        self.net = SimNet(list(range(n)), seed=seed, drop_prob=drop_prob)
+        # Multi-Raft: `group` scopes this cluster to one shard consensus
+        # group of a larger fabric (repro/core/shards.py).  With group
+        # set, wire addresses become (group, nid) and the SimNet is
+        # usually SHARED — we register our addresses on it but do not own
+        # its clock: tick() is delegated to the fabric owner
+        # (_tick_parent) so local wait loops (elect, client retries,
+        # drain_shipping) keep every group's nodes live.
+        self.group = group
+        self._owns_net = net is None
+        self._tick_parent = None
+        if net is None:
+            self.net = SimNet([self.addr(i) for i in range(n)], seed=seed,
+                              drop_prob=drop_prob)
+        else:
+            self.net = net
+            for i in range(n):
+                self.net.add_node(self.addr(i))
         for r in self.removed:
-            self.net.remove_node(r)
-        self.metrics: List[Metrics] = [Metrics(node=i) for i in range(n)]
+            self.net.remove_node(self.addr(r))
+        self.metrics: List[Metrics] = [Metrics(node=self.addr(i))
+                                       for i in range(n)]
         self.engines: List = [None] * n
         self.nodes: List[Optional[RaftNode]] = [None] * n
         self.leader_hint = leader_hint
@@ -89,6 +108,18 @@ class Cluster:
                                   default_consistency=default_consistency)
 
     # ------------------------------------------------------------ plumbing
+    def addr(self, i: int):
+        """Wire address of local node id i on the (possibly shared) net."""
+        return i if self.group is None else (self.group, i)
+
+    def _local_ids(self, addrs) -> List[int]:
+        """Filter wire addresses down to THIS group's local ids — keeps
+        shared-net health reports per-group (and sortable)."""
+        if self.group is None:
+            return [a for a in addrs if not isinstance(a, tuple)]
+        return [a[1] for a in addrs
+                if isinstance(a, tuple) and a[0] == self.group]
+
     def _engine_dir(self, i: int) -> str:
         return os.path.join(self.workdir, f"node{i}")
 
@@ -136,7 +167,8 @@ class Cluster:
             voters=(cc["voters"] if cc else None),
             learners=(cc["learners"] if cc else None),
             promote_lag=self.promote_lag,
-            auto_promote=self.auto_promote)
+            auto_promote=self.auto_promote,
+            group=self.group)
         node.metrics = self.metrics[i]   # read-tier evidence (quorum rounds)
         # deterministic first leader: the hinted node's FIRST deadline
         # fires early; every later reset uses the full election timeout.
@@ -193,19 +225,19 @@ class Cluster:
             return
         last = node.entries[-1].index if node.entries else node.snap_index
         if last > 0:
-            t.event("durable", node.nid, last, baseline=True)
+            t.event("durable", node.addr, last, baseline=True)
         if node.commit_index > 0:
-            t.event("commit_learned", node.nid, node.commit_index,
+            t.event("commit_learned", node.addr, node.commit_index,
                     baseline=True)
         if node.last_applied > 0:
-            t.event("apply", node.nid, node.last_applied, baseline=True)
+            t.event("apply", node.addr, node.last_applied, baseline=True)
         if node.role == LEADER:
             # seed the acked map: commits after a mid-run install may
             # rest on match_index earned before the tracer was watching
             for p, m in sorted(node.match_index.items()):
                 if p != node.nid and m > 0:
-                    t.event("ack_recv", node.nid, m, baseline=True,
-                            **{"from": p})
+                    t.event("ack_recv", node.addr, m, baseline=True,
+                            **{"from": node._addr(p)})
 
     # --------------------------------------------------------------- tracing
     def enable_tracing(self) -> "_trace.Tracer":
@@ -227,35 +259,41 @@ class Cluster:
         return t
 
     def registry(self, reg: Optional["_trace.MetricsRegistry"] = None,
-                 ) -> "_trace.MetricsRegistry":
+                 **extra: str) -> "_trace.MetricsRegistry":
         """Fill a labeled MetricsRegistry from every node's Metrics plus
         cluster-level gauges (liveness, Raft progress, SimNet traffic) —
-        the structured successor to health_report()'s ad-hoc dicts."""
+        the structured successor to health_report()'s ad-hoc dicts.
+        `extra` adds constant labels to every sample (ShardedCluster
+        passes shard=<g> and merges all groups into one registry);
+        net-wide counters are emitted only by the net's owner so a
+        shared fabric isn't double-counted."""
         reg = reg if reg is not None else _trace.MetricsRegistry()
         for i, m in enumerate(self.metrics):
-            m.fill_registry(reg, node=str(i))
+            m.fill_registry(reg, node=str(i), **extra)
+        lab = sorted(("node",) + tuple(extra))
         up = reg.gauge("repro_node_up", "node is running and reachable",
-                       ["node"])
-        term = reg.gauge("repro_raft_term", "current raft term", ["node"])
+                       lab)
+        term = reg.gauge("repro_raft_term", "current raft term", lab)
         commit = reg.gauge("repro_raft_commit_index",
-                           "highest committed log index", ["node"])
+                           "highest committed log index", lab)
         applied = reg.gauge("repro_raft_last_applied",
-                            "highest applied log index", ["node"])
+                            "highest applied log index", lab)
         for i, nd in enumerate(self.nodes):
-            alive = nd is not None and i not in self.net.down
-            up.labels(node=str(i)).set(1 if alive else 0)
+            alive = nd is not None and self.addr(i) not in self.net.down
+            up.labels(node=str(i), **extra).set(1 if alive else 0)
             if nd is not None:
-                term.labels(node=str(i)).set(nd.current_term)
-                commit.labels(node=str(i)).set(nd.commit_index)
-                applied.labels(node=str(i)).set(nd.last_applied)
-        sent = reg.counter("repro_net_msgs_total",
-                           "simnet messages by outcome", ["outcome"])
-        sent.labels(outcome="sent").inc(self.net.sent_msgs)
-        sent.labels(outcome="dropped").inc(self.net.dropped_msgs)
-        drops = reg.counter("repro_net_drops_total",
-                            "simnet drops by reason", ["reason"])
-        for reason, cnt in sorted(self.net.drop_reasons.items()):
-            drops.labels(reason=reason).inc(cnt)
+                term.labels(node=str(i), **extra).set(nd.current_term)
+                commit.labels(node=str(i), **extra).set(nd.commit_index)
+                applied.labels(node=str(i), **extra).set(nd.last_applied)
+        if self._owns_net:
+            sent = reg.counter("repro_net_msgs_total",
+                               "simnet messages by outcome", ["outcome"])
+            sent.labels(outcome="sent").inc(self.net.sent_msgs)
+            sent.labels(outcome="dropped").inc(self.net.dropped_msgs)
+            drops = reg.counter("repro_net_drops_total",
+                                "simnet drops by reason", ["reason"])
+            for reason, cnt in sorted(self.net.drop_reasons.items()):
+                drops.labels(reason=reason).inc(cnt)
         return reg
 
     def prometheus_text(self) -> str:
@@ -266,6 +304,12 @@ class Cluster:
 
     # ---------------------------------------------------------------- time
     def tick(self, k: int = 1):
+        if self._tick_parent is not None:
+            # shared fabric: the shard owner advances net time ONCE per
+            # step and ticks EVERY group's nodes, so any group's local
+            # wait loop keeps the whole fabric live
+            self._tick_parent.tick(k)
+            return
         for _ in range(k):
             self.net.tick()
             for node in self.nodes:
@@ -274,7 +318,7 @@ class Cluster:
 
     def leader(self) -> Optional[RaftNode]:
         live = [nd for i, nd in enumerate(self.nodes)
-                if nd is not None and i not in self.net.down
+                if nd is not None and self.addr(i) not in self.net.down
                 and i not in self.removed]
         leaders = [nd for nd in live if nd.role == LEADER]
         if not leaders:
@@ -300,8 +344,8 @@ class Cluster:
         add-learner config entry has committed and the node is running."""
         nid = self.n
         self.n += 1
-        self.net.add_node(nid)
-        self.metrics.append(Metrics(node=nid))
+        self.net.add_node(self.addr(nid))
+        self.metrics.append(Metrics(node=self.addr(nid)))
         self.engines.append(None)
         self.nodes.append(None)
         self.elect()
@@ -370,7 +414,7 @@ class Cluster:
             self.engines[nid].close()
         self.nodes[nid] = None
         self.engines[nid] = None
-        self.net.remove_node(nid)
+        self.net.remove_node(self.addr(nid))
         self._save_manifest()
 
     def replace_node(self, dead: int, *, max_ticks: int = 20000) -> int:
@@ -439,14 +483,16 @@ class Cluster:
             ld = self.leader()
             if ld is not None:
                 caught_up = all(
-                    self.nodes[p] is None or p in self.net.down or
+                    self.nodes[p] is None or
+                    self.addr(p) in self.net.down or
                     self.nodes[p].last_applied >= ld.commit_index
                     for p in ld.peers)
                 shipped = True
                 if ld.shipper is not None and ld.shipper.records:
                     tip = ld.shipper.records[-1][0]
                     shipped = all(
-                        p in self.net.down or self.nodes[p] is None or
+                        self.addr(p) in self.net.down or
+                        self.nodes[p] is None or
                         (ld.shipper.peers.get(p) is not None and
                          ld.shipper.peers[p].pos >= tip)
                         for p in ld.peers)
@@ -500,7 +546,7 @@ class Cluster:
             else:
                 membership = "none"     # e.g. demoted but still running
             nodes.append({
-                "node": i, "up": i not in self.net.down,
+                "node": i, "up": self.addr(i) not in self.net.down,
                 "role": nd.role, "term": nd.current_term,
                 "membership": membership,
                 "config_index": nd.config_index,
@@ -522,9 +568,11 @@ class Cluster:
                     "dropped_msgs": self.net.dropped_msgs,
                     "drop_reasons": dict(self.net.drop_reasons),
                     "drop_prob": self.net.drop_prob,
-                    "down": sorted(self.net.down),
-                    "removed": sorted(self.net.removed),
-                    "partitions": [sorted(p) for p in self.net.blocked]},
+                    "down": sorted(self._local_ids(self.net.down)),
+                    "removed": sorted(self._local_ids(self.net.removed)),
+                    "partitions": [sorted(self._local_ids(p))
+                                   for p in self.net.blocked
+                                   if len(self._local_ids(p)) == len(p)]},
             "reads": self.read_report(),
             "replication": self.replication_report(),
             "faults": {
@@ -540,16 +588,26 @@ class Cluster:
     # these hooks only — tests and schedules stay independent of SimNet
     # internals, and every hook is deterministic given the cluster seeds.
     def partition(self, a: int, b: int):
-        self.net.partition(a, b)
+        self.net.partition(self.addr(a), self.addr(b))
 
     def heal(self, a: int = None, b: int = None):
-        self.net.heal(a, b)
+        if a is None:
+            if self.group is None:
+                self.net.heal()
+            else:
+                # shared fabric: only discard partitions wholly inside
+                # THIS group — other shards' faults are not ours to fix
+                for p in list(self.net.blocked):
+                    if len(self._local_ids(p)) == len(p):
+                        self.net.blocked.discard(p)
+        else:
+            self.net.heal(self.addr(a), self.addr(b))
 
     def isolate(self, i: int):
         """Symmetric partition: cut every link touching node i."""
         for j in range(self.n):
             if j != i:
-                self.net.partition(i, j)
+                self.net.partition(self.addr(i), self.addr(j))
 
     def set_drop_prob(self, p: float):
         """Net-wide lossy window (chaos 'lossy' action); 0 restores."""
@@ -591,7 +649,7 @@ class Cluster:
         return True
 
     def crash(self, i: int):
-        self.net.crash(i)
+        self.net.crash(self.addr(i))
         if self.engines[i] is not None:
             self.engines[i].close()
         self.nodes[i] = None
@@ -606,7 +664,7 @@ class Cluster:
         fs = faultfs.active()
         if fs is None:
             return self.crash(i)
-        self.net.crash(i)
+        self.net.crash(self.addr(i))
         self.nodes[i] = None
         self.engines[i] = None      # dropped un-closed on purpose
         fs.materialize(self._engine_dir(i) + os.sep)
@@ -631,7 +689,7 @@ class Cluster:
         t0 = time.perf_counter()
         self._make_node(i, fresh=False)
         dt = time.perf_counter() - t0
-        self.net.restart(i)
+        self.net.restart(self.addr(i))
         return dt
 
     def destroy(self):

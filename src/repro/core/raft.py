@@ -240,8 +240,17 @@ class RaftNode:
                  voters: Optional[List[int]] = None,
                  learners: Optional[List[int]] = None,
                  promote_lag: int = 16,
-                 auto_promote: bool = True):
+                 auto_promote: bool = True,
+                 group: Optional[int] = None):
         self.nid = nid
+        # Multi-Raft: `group` names the shard consensus group this node
+        # belongs to.  The protocol below is entirely group-oblivious —
+        # nid/peers/quorum stay small local ints — and only the NETWORK
+        # boundary translates to the shared SimNet's wire address
+        # (group, nid), so many independent groups multiplex over one
+        # fabric (see repro/core/shards.py).  group=None keeps the
+        # original single-group addressing byte-for-byte.
+        self.group = group
         # membership: by default every constructor peer (plus self) is a
         # voter; explicit voters/learners model a node joining an existing
         # cluster (a fresh learner, a restarted member).  self.peers is
@@ -330,6 +339,25 @@ class RaftNode:
         # metrics for tests
         self.applied_log: List[Tuple[int, LogEntry]] = []
         self.leadership_history: List[Tuple[int, int]] = []
+
+    # --------------------------------------------------- address plumbing
+    @property
+    def addr(self):
+        """This node's wire address on the SimNet: the bare local id when
+        ungrouped, (group, nid) when part of a shard group.  Trace events
+        are keyed by addr too, so the causality auditor's per-node state
+        is naturally per-group — no cross-group false positives."""
+        return self.nid if self.group is None else (self.group, self.nid)
+
+    def _addr(self, peer: int):
+        return peer if self.group is None else (self.group, peer)
+
+    def _local(self, src) -> int:
+        """Incoming wire address -> local peer id (intra-group only)."""
+        return src if self.group is None else src[1]
+
+    def _send(self, dst: int, msg, size: int = 0):
+        self.net.send(self.addr, self._addr(dst), msg, size=size)
 
     # ------------------------------------------------------------- helpers
     def _reset_election_deadline(self):
@@ -489,7 +517,7 @@ class RaftNode:
         off = self.store.append(entry)
         self.store.commit_window()           # durable before ack
         if _trace._ACTIVE is not None:
-            _trace._ACTIVE.event("durable", self.nid, entry.index)
+            _trace._ACTIVE.event("durable", self.addr, entry.index)
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
@@ -552,7 +580,7 @@ class RaftNode:
         self._transfer_until = self.net.time + self.eto[0]
         self._abort_reads()                  # lease dies at send time
         t = _trace._ACTIVE
-        self.net.send(self.nid, to, TimeoutNow(
+        self._send(to, TimeoutNow(
             self.current_term, self.nid,
             ctx=t.current() if t is not None else 0))
         if self.metrics is not None:
@@ -568,9 +596,9 @@ class RaftNode:
             return
         self._last_leader_contact = _NEVER   # the leader ASKED for this
         t = _trace._ACTIVE
-        sid = t.begin("timeout_now", kind="raft", node=self.nid,
+        sid = t.begin("timeout_now", kind="raft", node=self.addr,
                       parent=m.ctx,
-                      old_leader=src) if t is not None else None
+                      old_leader=self._addr(src)) if t is not None else None
         self._start_election(transfer=True)
         if sid is not None:
             t.end(sid)
@@ -696,13 +724,13 @@ class RaftNode:
         entry = LogEntry(self.current_term, self.last_log_index + 1,
                          KIND_PUT, key, value)
         t = _trace._ACTIVE
-        sid = t.begin("raft.append", kind="raft", node=self.nid,
+        sid = t.begin("raft.append", kind="raft", node=self.addr,
                       index=entry.index) if t is not None else None
         off = self.store.append(entry)           # THE single persistence
         self.store.commit_window()               # durable before ack
         if t is not None:
-            t.event("durable", self.nid, entry.index)
-            t.register_index(entry.index)
+            t.event("durable", self.addr, entry.index)
+            t.register_index(entry.index, group=self.group)
             t.end(sid)
         self.entries.append(entry)
         self.offsets.append(off)
@@ -724,15 +752,15 @@ class RaftNode:
             entries.append(LogEntry(self.current_term, base + 1 + i,
                                     KIND_PUT, key, value))
         t = _trace._ACTIVE
-        sid = t.begin("raft.append_batch", kind="raft", node=self.nid,
+        sid = t.begin("raft.append_batch", kind="raft", node=self.addr,
                       n=len(entries)) if t is not None else None
         offs = self.store.append_batch(entries)  # ONE persistence pass
         self.store.commit_window()               # ONE fsync per store
         if t is not None:
-            t.event("durable", self.nid, entries[-1].index if entries
+            t.event("durable", self.addr, entries[-1].index if entries
                     else base)
             for e in entries:
-                t.register_index(e.index)
+                t.register_index(e.index, group=self.group)
             t.end(sid)
         self.entries.extend(entries)
         self.offsets.extend(offs)
@@ -745,10 +773,10 @@ class RaftNode:
 
     # -------------------------------------------------------------- tick
     def tick(self):
-        if self.nid in self.net.down:
+        if self.addr in self.net.down:
             return
-        for src, msg in self.net.deliver(self.nid):
-            self._handle(src, msg)
+        for src, msg in self.net.deliver(self.addr):
+            self._handle(self._local(src), msg)
         now = self.net.time
         if self.role == LEADER:
             # a queued ReadIndex batch rides its own round immediately
@@ -786,7 +814,7 @@ class RaftNode:
         self.votes = {self.nid}
         self._reset_election_deadline()
         for p in sorted(self.voters - {self.nid}):
-            self.net.send(self.nid, p, RequestVote(
+            self._send(p, RequestVote(
                 self.current_term, self.nid, self.last_log_index,
                 self.term_at(self.last_log_index), transfer=transfer))
         if self._vote_quorum():
@@ -813,7 +841,7 @@ class RaftNode:
         off = self.store.append(entry)
         self.store.commit_window()
         if _trace._ACTIVE is not None:
-            _trace._ACTIVE.event("durable", self.nid, entry.index)
+            _trace._ACTIVE.event("durable", self.addr, entry.index)
         self.entries.append(entry)
         self.offsets.append(off)
         self.match_index[self.nid] = self.last_log_index
@@ -845,7 +873,7 @@ class RaftNode:
         li, lt, payload = snap
         ci, cv, cl = self._config_at(li)
         t = _trace._ACTIVE
-        self.net.send(self.nid, peer, InstallSnapshot(
+        self._send(peer, InstallSnapshot(
             self.current_term, self.nid, li, lt, payload,
             config_index=ci, voters=cv, learners=cl,
             ctx=t.current() if t is not None else 0))
@@ -869,9 +897,10 @@ class RaftNode:
                               ni + self.max_batch - 1) + 1)]
         size = sum(len(e.key) + len(e.value) + 19 for e in ents)
         t = _trace._ACTIVE
-        ctx = t.ctx_for_range(ents[0].index, ents[-1].index) \
+        ctx = t.ctx_for_range(ents[0].index, ents[-1].index,
+                              group=self.group) \
             if (t is not None and ents) else 0
-        self.net.send(self.nid, peer, AppendEntries(
+        self._send(peer, AppendEntries(
             self.current_term, self.nid, prev, self.term_at(prev), ents,
             self.commit_index, probe=self._probe_seq, ctx=ctx), size=size)
 
@@ -931,8 +960,7 @@ class RaftNode:
                 self.voted_for = m.candidate
                 self._persist_meta()
                 self._reset_election_deadline()
-        self.net.send(self.nid, src, RequestVoteReply(self.current_term,
-                                                      granted))
+        self._send(src, RequestVoteReply(self.current_term, granted))
 
     def _on_vote_reply(self, src: int, m: RequestVoteReply):
         if m.term > self.current_term:
@@ -949,7 +977,7 @@ class RaftNode:
         if m.term > self.current_term:
             self._become_follower(m.term)
         if m.term < self.current_term:
-            self.net.send(self.nid, src, AppendEntriesReply(
+            self._send(src, AppendEntriesReply(
                 self.current_term, False, 0))
             return
         if self.role == LEADER:
@@ -964,7 +992,7 @@ class RaftNode:
         # consistency check acknowledges the sender's leadership
         if m.prev_log_index > self.last_log_index or \
                 self.term_at(m.prev_log_index) != m.prev_log_term:
-            self.net.send(self.nid, src, AppendEntriesReply(
+            self._send(src, AppendEntriesReply(
                 self.current_term, False, self.snap_index, probe=m.probe,
                 applied=self.last_applied))
             return
@@ -984,7 +1012,7 @@ class RaftNode:
             # graft this follower's durability work onto the originating
             # op's span (m.ctx crossed the wire); ctx 0 (no originating
             # client op — e.g. a no-op barrier) makes it a root span
-            sid = t.begin("follower.append", kind="raft", node=self.nid,
+            sid = t.begin("follower.append", kind="raft", node=self.addr,
                           parent=m.ctx, n=len(m.entries) - start,
                           first=idx) if t is not None else None
             if idx <= self.last_log_index:
@@ -1001,7 +1029,7 @@ class RaftNode:
             self.offsets.extend(offs)
             self.store.commit_window()             # durable before the ack
             if t is not None:
-                t.event("durable", self.nid, batch[-1].index)
+                t.event("durable", self.addr, batch[-1].index)
                 t.end(sid)
             for e in batch:
                 if e.kind == KIND_CONFIG:          # effective on append
@@ -1010,12 +1038,12 @@ class RaftNode:
         if m.leader_commit > self.commit_index:
             self.commit_index = min(m.leader_commit, self.last_log_index)
             if t is not None:
-                t.event("commit_learned", self.nid, self.commit_index,
-                        leader=m.leader)
+                t.event("commit_learned", self.addr, self.commit_index,
+                        leader=self._addr(m.leader))
         self._apply_committed()
         if t is not None:
-            t.event("ack_sent", self.nid, idx, to=src)
-        self.net.send(self.nid, src, AppendEntriesReply(
+            t.event("ack_sent", self.addr, idx, to=self._addr(src))
+        self._send(src, AppendEntriesReply(
             self.current_term, True, idx, probe=m.probe,
             applied=self.last_applied, ctx=m.ctx))
 
@@ -1039,8 +1067,8 @@ class RaftNode:
             self._check_read_quorum()
         if m.success:
             if _trace._ACTIVE is not None:
-                _trace._ACTIVE.event("ack_recv", self.nid, m.match_index,
-                                     **{"from": src})
+                _trace._ACTIVE.event("ack_recv", self.addr, m.match_index,
+                                     **{"from": self._addr(src)})
             self.match_index[src] = max(self.match_index.get(src, 0),
                                         m.match_index)
             self.next_index[src] = self.match_index[src] + 1
@@ -1064,8 +1092,9 @@ class RaftNode:
             if self._quorum(votes):
                 self.commit_index = n
                 if _trace._ACTIVE is not None:
-                    _trace._ACTIVE.event("commit", self.nid, n,
-                                         voters=sorted(self.voters))
+                    _trace._ACTIVE.event("commit", self.addr, n,
+                                         voters=[self._addr(v) for v
+                                                 in sorted(self.voters)])
                 break
         if self.role == LEADER and self.nid not in self.voters and \
                 self.config_index <= self.commit_index:
@@ -1091,10 +1120,11 @@ class RaftNode:
             if t is not None:
                 # graft the apply under the newest originating op in the
                 # drain (cross-node: the registry is tracer-global)
-                sid = t.begin("apply", kind="apply", node=self.nid,
+                sid = t.begin("apply", kind="apply", node=self.addr,
                               parent=t.ctx_for_range(
                                   batch[0][0].index,
-                                  batch[-1][0].index),
+                                  batch[-1][0].index,
+                                  group=self.group),
                               n=len(batch))
             # whole drain applied as one group: engines coalesce the index
             # WAL records into one buffered write...
@@ -1108,7 +1138,7 @@ class RaftNode:
             if sid is not None:
                 t.end(sid)
         if t is not None and self.last_applied > before:
-            t.event("apply", self.nid, self.last_applied)
+            t.event("apply", self.addr, self.last_applied)
 
     # ----------------------------------------------------------- snapshot
     def repoint_offsets(self, new_offsets: Optional[Dict[int, int]]):
@@ -1149,7 +1179,7 @@ class RaftNode:
             # advances, and clear any adoption stuck waiting for a resync
             if self.adopter is not None:
                 self.adopter.reset()
-            self.net.send(self.nid, src, InstallSnapshotReply(
+            self._send(src, InstallSnapshotReply(
                 self.current_term, self.snap_index, ctx=m.ctx))
             return
         # Raft §7: when our log already holds the snapshot's last entry,
@@ -1158,7 +1188,7 @@ class RaftNode:
         keep_suffix = (m.last_index <= self.last_log_index and
                        self.term_at(m.last_index) == m.last_term)
         t = _trace._ACTIVE
-        sid = t.begin("install_snapshot", kind="raft", node=self.nid,
+        sid = t.begin("install_snapshot", kind="raft", node=self.addr,
                       parent=m.ctx, last_index=m.last_index,
                       keep_suffix=keep_suffix) if t is not None else None
         new_offsets = None
@@ -1167,7 +1197,8 @@ class RaftNode:
                                                    m.payload,
                                                    keep_tail=keep_suffix)
         if t is not None:
-            t.event("snapshot_install", self.nid, m.last_index, leader=src)
+            t.event("snapshot_install", self.addr, m.last_index,
+                    leader=self._addr(src))
             t.end(sid)
         if self.adopter is not None:
             self.adopter.reset()   # the snapshot supersedes in-flight ships
@@ -1193,7 +1224,7 @@ class RaftNode:
             self._apply_config_change()
         self.commit_index = max(self.commit_index, m.last_index)
         self.last_applied = max(self.last_applied, m.last_index)
-        self.net.send(self.nid, src, InstallSnapshotReply(
+        self._send(src, InstallSnapshotReply(
             self.current_term, m.last_index, ctx=m.ctx))
 
     def _on_snapshot_reply(self, src: int, m: InstallSnapshotReply):
@@ -1202,8 +1233,8 @@ class RaftNode:
         if _trace._ACTIVE is not None:
             # an installed snapshot is durable applied state: it counts
             # as this peer's ack for everything through match_index
-            _trace._ACTIVE.event("ack_recv", self.nid, m.match_index,
-                                 **{"from": src})
+            _trace._ACTIVE.event("ack_recv", self.addr, m.match_index,
+                                 **{"from": self._addr(src)})
         self.match_index[src] = max(self.match_index.get(src, 0),
                                     m.match_index)
         self.next_index[src] = self.match_index[src] + 1

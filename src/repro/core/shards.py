@@ -1,0 +1,606 @@
+"""Multi-Raft sharded keyspace: N independent Raft groups over one SimNet.
+
+Every put used to serialize through a single Raft leader — the wall
+between this reproduction and "millions of users" (ROADMAP).  The paper's
+key-value separation lowers per-op I/O but does nothing for single-leader
+write serialization; following Bizur's observation that consensus
+scalability comes from MANY SMALL consensus domains rather than a fatter
+single log, this module partitions the keyspace into contiguous range
+shards, each an independent Raft group with its own ``NezhaEngine``
+(own workdir, own value log, own run shipping, own GC), all multiplexed
+over ONE shared ``SimNet``.
+
+Three layers:
+
+* **ShardMap** — the routing table: sorted split keys defining
+  ``len(splits)+1`` contiguous ranges.  ``shard_for(key)`` is a bisect;
+  ``shards_for_range`` returns the contiguous group-id range a scan
+  touches.  ``ShardMap.even`` interpolates splits uniformly over the
+  keyspace's big-endian integer image.
+
+* **ShardedCluster** — one ``Cluster`` per group, constructed with
+  ``group=g`` and the shared net, so wire addresses are ``(group, nid)``
+  tuples and each group keeps its own election timers, leases and
+  membership (raft.py is group-oblivious: only its network boundary
+  translates local ids to wire addresses).  Each group's ``tick`` is
+  delegated back here (``_tick_parent``), so any group-local wait loop
+  (elect, client retries, drain_shipping) advances net time ONCE and
+  ticks EVERY group's nodes — the fabric never stalls because one shard
+  is waiting.  Faults (kill_leader / partition / restart) target a
+  specific group; the chaos scheduler drives them per-shard.
+
+* **ShardedClient / ShardedSession** — routing client.  Point ops go to
+  ``shard_for(key)``'s group client unchanged.  ``put_many`` splits the
+  items into per-shard batches and drives one ``_ShardPipe`` per shard
+  CONCURRENTLY: every pipe keeps its own in-flight window against its
+  group's leader and all pipes share each ``tick`` (interleaved, not
+  shard-serial), which is where the throughput scaling in
+  benchmarks/fig_shard.py comes from — fsyncs and replication rounds of
+  different shards overlap in virtual time.  Cross-shard scans
+  scatter-gather shard-local scans (each with its tier's guarantees) and
+  stitch them with the same ``kway_merge_newest_wins`` the LSM uses —
+  shard ranges are disjoint, so the merge is a pure ordered
+  concatenation and the result is byte-equal to an unsharded reference.
+  A ``ShardedSession`` is a vector of per-group session tokens, so
+  read-your-writes and monotonic reads hold across shard boundaries:
+  a write on shard A advances A's token only, and a later read on shard
+  B is governed by B's token — exactly the per-shard-vector design the
+  HLC session-token ROADMAP item calls for.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from bisect import bisect_right
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core import trace as _trace
+from repro.core.client import LINEARIZABLE, SESSION, Session
+from repro.core.cluster import Cluster
+from repro.core.metrics import Metrics
+from repro.core.raft import LEADER, RaftNode
+from repro.core.simnet import SimNet
+from repro.core.storage import kway_merge_newest_wins
+
+
+class ShardMap:
+    """Range partitioning: ``splits`` are sorted keys; shard ``g`` owns
+    ``[splits[g-1], splits[g])`` (open-ended at both extremes)."""
+
+    def __init__(self, splits: List[bytes]):
+        self.splits: List[bytes] = sorted(splits)
+        self.n_shards = len(self.splits) + 1
+
+    @classmethod
+    def even(cls, n_shards: int, lo: bytes = b"",
+             hi: bytes = b"\xff" * 8) -> "ShardMap":
+        """Uniform splits over [lo, hi]: both bounds are padded to a
+        common width and interpolated as big-endian integers, so keys
+        with a shared prefix (e.g. ``user%010d``) still spread evenly
+        as long as [lo, hi] brackets them."""
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if n_shards == 1:
+            return cls([])
+        width = max(len(lo), len(hi), 1)
+        a = int.from_bytes(lo.ljust(width, b"\x00"), "big")
+        b = int.from_bytes(hi.ljust(width, b"\xff"), "big")
+        if b <= a:
+            raise ValueError("key_hi must sort after key_lo")
+        return cls([(a + (b - a) * i // n_shards).to_bytes(width, "big")
+                    for i in range(1, n_shards)])
+
+    @classmethod
+    def from_keys(cls, keys: Iterable[bytes], n_shards: int) -> "ShardMap":
+        """Quantile splits from a key sample.  ``even`` is uniform over
+        the raw BYTE space, which skews badly for structured keys (e.g.
+        decimal-string ids, where most of the byte space holds no key);
+        sampling the actual distribution is how a production balancer
+        picks splits, and what the benchmarks use."""
+        ks = sorted(keys)
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if n_shards == 1 or not ks:
+            return cls([])
+        splits = sorted({ks[len(ks) * i // n_shards]
+                         for i in range(1, n_shards)})
+        return cls(splits)
+
+    def shard_for(self, key: bytes) -> int:
+        return bisect_right(self.splits, key)
+
+    def shards_for_range(self, lo: bytes, hi: bytes) -> range:
+        """Contiguous group ids a scan over [lo, hi] can touch.  Safe
+        under either open or closed upper bounds: an extra boundary
+        shard just contributes an empty part."""
+        if hi < lo:
+            return range(0)
+        return range(self.shard_for(lo), self.shard_for(hi) + 1)
+
+    def range_of(self, g: int) -> Tuple[Optional[bytes], Optional[bytes]]:
+        """(inclusive lo, exclusive hi) of shard g; None = unbounded."""
+        lo = self.splits[g - 1] if g > 0 else None
+        hi = self.splits[g] if g < len(self.splits) else None
+        return lo, hi
+
+
+class ShardedSession:
+    """Per-shard vector of session tokens.  Each group's Raft indexes are
+    independent, so one scalar token is meaningless across shards; the
+    vector gives exact read-your-writes + monotonic reads per shard,
+    which composes to the cross-shard guarantee (any key's reads and
+    writes always land on the same group)."""
+
+    def __init__(self, client: "ShardedClient"):
+        self.client = client
+        self._per_group: Dict[int, Session] = {}
+
+    def for_group(self, g: int) -> Session:
+        s = self._per_group.get(g)
+        if s is None:
+            s = self.client.sc.groups[g].client.session()
+            self._per_group[g] = s
+        return s
+
+    def vector(self) -> Dict[int, int]:
+        """The token itself: group id -> last observed raft index."""
+        return {g: s.last_index
+                for g, s in sorted(self._per_group.items())}
+
+    # ------------------------------------------------------------- sugar
+    # Mirrors client.Session so workload/session-test call sites work on
+    # either flavor unchanged.
+    def observe(self, index) -> None:
+        # A bare raft index is ambiguous across groups; the per-group
+        # sessions already observe exact indexes on the write path.
+        if isinstance(index, tuple):
+            g, idx = index
+            self.for_group(g).observe(idx)
+
+    def put(self, key: bytes, value: bytes, **kw) -> int:
+        g = self.client.sc.shard_map.shard_for(key)
+        return self.for_group(g).put(key, value, **kw)
+
+    def put_many(self, items, **kw) -> int:
+        return self.client.put_many(items, session=self, **kw)
+
+    def get(self, key: bytes, *, node: Optional[int] = None):
+        g = self.client.sc.shard_map.shard_for(key)
+        return self.for_group(g).get(key, node=node)
+
+    def scan(self, lo: bytes, hi: bytes, *, node: Optional[int] = None):
+        return self.client.scan(lo, hi, SESSION, session=self, node=node)
+
+
+class _ShardPipe:
+    """One shard's share of a cross-shard put_many: the same in-flight
+    window state machine as NezhaClient._put_many_locked, but with the
+    tick pulled OUT — the ShardedClient pumps every pipe, ticks the
+    fabric once, then lets every pipe confirm, so all shards' windows
+    are in flight simultaneously."""
+
+    def __init__(self, cluster: Cluster, g: int, items: list, window: int,
+                 batch: Optional[int], session: Optional[Session],
+                 t, root: Optional[int]):
+        self.c = cluster
+        self.g = g
+        self.it = iter(items)
+        self.window = window
+        self.batch = batch
+        self.session = session
+        self.t = t
+        self.root = root
+        self.sid: Optional[int] = None
+        self.ld: Optional[RaftNode] = None
+        self.inflight: List[Tuple[list, List[int]]] = []
+        self.done = 0
+        self.exhausted = False
+        self.finished = False
+
+    def _ensure_span(self):
+        if self.t is None or self.sid is not None:
+            return
+        # one child span per shard under the put_many root; begin()
+        # pushes it, exit() pops it — it is re-entered around each
+        # submit so leader appends nest under the right shard subtree
+        self.sid = self.t.begin("put_many.shard", kind="op",
+                                shard=self.g, parent=self.root)
+        self.t.exit(self.sid)
+
+    def _submit(self, chunk) -> List[int]:
+        self._ensure_span()
+        if self.t is not None:
+            self.t.enter(self.sid)
+        try:
+            idxs = self.ld.client_put_many(chunk)
+            while idxs is None:           # deposed since elect(): re-elect
+                self.ld = self.c.elect()
+                idxs = self.ld.client_put_many(chunk)
+            return idxs
+        finally:
+            if self.t is not None:
+                self.t.exit(self.sid)
+
+    def pump(self):
+        """Refill this shard's window (submits only — no ticking)."""
+        if self.finished:
+            return
+        if self.ld is None:
+            self.ld = self.c.elect()
+            if self.batch is None:
+                self.batch = max(1, min(self.window, self.ld.max_batch))
+        npending = sum(len(idxs) for _, idxs in self.inflight)
+        while not self.exhausted and npending < self.window:
+            chunk = []
+            room = min(self.batch, self.window - npending)
+            while len(chunk) < room:
+                nxt = next(self.it, None)
+                if nxt is None:
+                    self.exhausted = True
+                    break
+                chunk.append(nxt)
+            if not chunk:
+                break
+            self.inflight.append((chunk, self._submit(chunk)))
+            npending += len(chunk)
+        if self.exhausted and not self.inflight:
+            self._finish()
+
+    def confirm(self):
+        """Count applied prefixes; resubmit everything on a leadership
+        change (same at-least-once discipline as the unsharded path)."""
+        if self.finished or self.ld is None:
+            return
+        if self.inflight:
+            if self.ld.role != LEADER or self.c.leader() is not self.ld:
+                self.ld = self.c.elect()
+                self.inflight = [(chunk, self._submit(chunk))
+                                 for chunk, _ in self.inflight]
+            applied = self.ld.last_applied
+            keep = []
+            for chunk, idxs in self.inflight:
+                ok = sum(1 for i in idxs if i <= applied)
+                self.done += ok
+                if self.t is not None and ok:
+                    self.t.event("client_ack", self.ld.addr, idxs[ok - 1])
+                if self.session is not None and ok:
+                    self.session.observe(idxs[ok - 1])
+                if ok < len(idxs):
+                    keep.append((chunk[ok:], idxs[ok:]))
+            self.inflight = keep
+            for e in self.c.engines:
+                if e is not None:
+                    e.post_op()
+        if self.exhausted and not self.inflight:
+            self._finish()
+
+    def _finish(self):
+        self.finished = True
+        if self.t is not None and self.sid is not None:
+            self.t.end(self.sid)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(idxs) for _, idxs in self.inflight)
+
+
+class ShardedClient:
+    """ShardMap-aware routing client over per-group NezhaClients."""
+
+    def __init__(self, sc: "ShardedCluster", *,
+                 default_consistency: str = LINEARIZABLE):
+        self.sc = sc
+        self.default_consistency = default_consistency
+
+    def session(self) -> ShardedSession:
+        return ShardedSession(self)
+
+    def _gs(self, session: Optional[ShardedSession],
+            g: int) -> Optional[Session]:
+        if session is None:
+            return None
+        if isinstance(session, Session):      # a bare per-group session
+            return session
+        return session.for_group(g)
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: bytes, value: bytes, max_ticks: int = 2000) -> int:
+        g = self.sc.shard_map.shard_for(key)
+        return self.sc.groups[g].client.put(key, value,
+                                            max_ticks=max_ticks)
+
+    def put_many(self, items: Iterable[Tuple[bytes, bytes]],
+                 window: int = 64, max_ticks: int = 200000,
+                 batch: Optional[int] = None,
+                 session: Optional[ShardedSession] = None) -> int:
+        """Scatter the batch by shard and drive every shard's window in
+        the SAME tick loop: each iteration pumps all pipes, advances the
+        fabric one tick, then confirms all pipes.  N shards commit (and
+        fsync, and replicate) concurrently in virtual time."""
+        per: Dict[int, list] = {}
+        for kv in items:
+            per.setdefault(self.sc.shard_map.shard_for(kv[0]),
+                           []).append(kv)
+        if not per:
+            return 0
+        t = _trace._ACTIVE
+        root = t.begin("put_many", kind="op", shards=len(per)) \
+            if t is not None else None
+        try:
+            pipes = [_ShardPipe(self.sc.groups[g], g, part, window, batch,
+                                self._gs(session, g), t, root)
+                     for g, part in sorted(per.items())]
+            for _ in range(max_ticks):
+                active = [p for p in pipes if not p.finished]
+                if not active:
+                    return sum(p.done for p in pipes)
+                for p in active:
+                    p.pump()
+                self.sc.tick()
+                for p in active:
+                    p.confirm()
+            raise TimeoutError(
+                "sharded put_many stalled: " + ", ".join(
+                    f"shard{p.g}: {p.done} done, {p.pending} pending"
+                    for p in pipes if not p.finished))
+        finally:
+            if root is not None:
+                t.end(root)
+
+    # -------------------------------------------------------------- reads
+    def get(self, key: bytes, consistency: Optional[str] = None, *,
+            session: Optional[ShardedSession] = None,
+            node: Optional[int] = None) -> Optional[bytes]:
+        g = self.sc.shard_map.shard_for(key)
+        return self.sc.groups[g].client.get(
+            key, consistency, session=self._gs(session, g), node=node)
+
+    def scan(self, lo: bytes, hi: bytes,
+             consistency: Optional[str] = None, *,
+             session: Optional[ShardedSession] = None,
+             node: Optional[int] = None):
+        """Scatter-gather: shard-local scans (each under the requested
+        tier's guarantees against its own group) stitched back together
+        with the LSM's k-way merge.  Shard ranges are disjoint, so
+        newest-wins dedup never fires and the stitched result is
+        byte-equal to an unsharded reference scan."""
+        gids = list(self.sc.shard_map.shards_for_range(lo, hi))
+        if len(gids) == 1:
+            g = gids[0]
+            return self.sc.groups[g].client.scan(
+                lo, hi, consistency, session=self._gs(session, g),
+                node=node)
+        t = _trace._ACTIVE
+        sid = t.begin("scan.scatter", kind="op", shards=len(gids)) \
+            if t is not None else None
+        try:
+            parts = [self.sc.groups[g].client.scan(
+                lo, hi, consistency, session=self._gs(session, g),
+                node=node) for g in gids]
+            return list(kway_merge_newest_wins([iter(p) for p in parts]))
+        finally:
+            if sid is not None:
+                t.end(sid)
+
+
+class ShardedCluster:
+    """N-shard fabric: one Cluster per range shard over a shared SimNet.
+
+    The public surface mirrors Cluster (put/put_many/get/scan/session,
+    tick/elect, registry/health_report, fault hooks) so benchmarks, the
+    workload harness and the chaos scheduler drive either shape —
+    fault hooks additionally take ``group=`` to target one shard."""
+
+    def __init__(self, n_shards: int = 4, n: int = 3,
+                 engine: str = "nezha", workdir: str = "", seed: int = 0,
+                 shard_map: Optional[ShardMap] = None,
+                 key_lo: bytes = b"", key_hi: bytes = b"\xff" * 8,
+                 drop_prob: float = 0.0,
+                 default_consistency: str = LINEARIZABLE,
+                 **cluster_kwargs):
+        self.shard_map = shard_map if shard_map is not None \
+            else ShardMap.even(n_shards, key_lo, key_hi)
+        self.n_shards = self.shard_map.n_shards
+        self.n = n
+        self.workdir = workdir
+        os.makedirs(workdir, exist_ok=True)
+        self.net = SimNet([], seed=seed, drop_prob=drop_prob)
+        self.groups: List[Cluster] = []
+        for g in range(self.n_shards):
+            c = Cluster(
+                n=n, engine=engine,
+                workdir=os.path.join(workdir, f"shard{g}"),
+                # decorrelate per-group RNG streams (elections, drops)
+                seed=seed + 1_000_003 * g,
+                # stagger initial leaders across the replica slots so
+                # one simulated host doesn't lead every shard
+                leader_hint=g % n,
+                default_consistency=default_consistency,
+                group=g, net=self.net, **cluster_kwargs)
+            c._tick_parent = self
+            self.groups.append(c)
+        self.client = ShardedClient(
+            self, default_consistency=default_consistency)
+
+    # ---------------------------------------------------------------- time
+    def tick(self, k: int = 1):
+        """Advance the fabric: net time moves ONCE per step and every
+        group's nodes tick — this is what per-group Clusters delegate
+        to, so shard-local wait loops keep the whole fabric live."""
+        for _ in range(k):
+            self.net.tick()
+            for c in self.groups:
+                for node in c.nodes:
+                    if node is not None:
+                        node.tick()
+
+    def elect(self, max_ticks: int = 2000) -> List[RaftNode]:
+        """Settle a leader in EVERY group; returns them by group id."""
+        return [c.elect(max_ticks) for c in self.groups]
+
+    def leader(self, group: int = 0) -> Optional[RaftNode]:
+        return self.groups[group].leader()
+
+    # -------------------------------------------------------------- client
+    def put(self, key: bytes, value: bytes, max_ticks: int = 2000) -> int:
+        return self.client.put(key, value, max_ticks=max_ticks)
+
+    def put_many(self, items, window: int = 64, max_ticks: int = 200000,
+                 batch: Optional[int] = None,
+                 session: Optional[ShardedSession] = None):
+        return self.client.put_many(items, window=window,
+                                    max_ticks=max_ticks, batch=batch,
+                                    session=session)
+
+    def get(self, key: bytes, consistency: Optional[str] = None, *,
+            session: Optional[ShardedSession] = None,
+            node: Optional[int] = None) -> Optional[bytes]:
+        return self.client.get(key, consistency, session=session,
+                               node=node)
+
+    def scan(self, lo: bytes, hi: bytes,
+             consistency: Optional[str] = None, *,
+             session: Optional[ShardedSession] = None,
+             node: Optional[int] = None):
+        return self.client.scan(lo, hi, consistency, session=session,
+                                node=node)
+
+    def session(self) -> ShardedSession:
+        return self.client.session()
+
+    # -------------------------------------------------------- aggregation
+    @property
+    def metrics(self) -> List[Metrics]:
+        return [m for c in self.groups for m in c.metrics]
+
+    @property
+    def engines(self) -> List:
+        return [e for c in self.groups for e in c.engines]
+
+    def registry(self, reg: Optional["_trace.MetricsRegistry"] = None
+                 ) -> "_trace.MetricsRegistry":
+        """One merged registry: every per-group family gains a ``shard``
+        label; shared-net counters are emitted exactly once (the groups
+        don't own the net, so they skip them)."""
+        reg = reg if reg is not None else _trace.MetricsRegistry()
+        for g, c in enumerate(self.groups):
+            c.registry(reg, shard=str(g))
+        sent = reg.counter("repro_net_msgs_total",
+                           "simnet messages by outcome", ["outcome"])
+        sent.labels(outcome="sent").inc(self.net.sent_msgs)
+        sent.labels(outcome="dropped").inc(self.net.dropped_msgs)
+        drops = reg.counter("repro_net_drops_total",
+                            "simnet drops by reason", ["reason"])
+        for reason, cnt in sorted(self.net.drop_reasons.items()):
+            drops.labels(reason=reason).inc(cnt)
+        return reg
+
+    def prometheus_text(self) -> str:
+        return self.registry().prometheus_text()
+
+    def scrape(self) -> dict:
+        return self.registry().scrape()
+
+    def health_report(self) -> dict:
+        """Fabric-level summary: per-shard leader/term/role rollups plus
+        the shared net's fault state and the merged registry scrape."""
+        shards = []
+        for g, c in enumerate(self.groups):
+            ld = c.leader()
+            lo, hi = self.shard_map.range_of(g)
+            roles = {}
+            for i, nd in enumerate(c.nodes):
+                if nd is None:
+                    roles[i] = "down"
+                elif c.addr(i) in self.net.down:
+                    roles[i] = "crashed"
+                else:
+                    roles[i] = nd.role
+            shards.append({
+                "shard": g,
+                "range": [lo.hex() if lo is not None else None,
+                          hi.hex() if hi is not None else None],
+                "leader": ld.nid if ld is not None else None,
+                "term": ld.current_term if ld is not None else None,
+                "commit_index": ld.commit_index if ld is not None else None,
+                "roles": roles,
+            })
+        return {
+            "time": self.net.time,
+            "n_shards": self.n_shards,
+            "shards": shards,
+            "net": {"sent_msgs": self.net.sent_msgs,
+                    "dropped_msgs": self.net.dropped_msgs,
+                    "drop_reasons": dict(self.net.drop_reasons),
+                    "down": sorted(self.net.down),
+                    "partitions": [sorted(p) for p in self.net.blocked]},
+            "metrics": self.scrape(),
+        }
+
+    # --------------------------------------------------------------- trace
+    def enable_tracing(self) -> "_trace.Tracer":
+        t = _trace.Tracer(clock=lambda: self.net.time)
+        _trace.install(t)
+        for c in self.groups:
+            for nd in c.nodes:
+                if nd is not None:
+                    c._baseline_events(nd)
+        return t
+
+    def disable_tracing(self) -> Optional["_trace.Tracer"]:
+        t = _trace.active()
+        _trace.uninstall()
+        return t
+
+    # --------------------------------------------------------------- faults
+    # Same hook names as Cluster, plus group targeting: the chaos
+    # scheduler resolves FaultEvent.group to one of these groups and
+    # calls the group-cluster hooks directly (workload.py).
+    def kill_leader(self, max_ticks: int = 2000, group: int = 0) -> int:
+        return self.groups[group].kill_leader(max_ticks)
+
+    def crash(self, i: int, group: int = 0):
+        self.groups[group].crash(i)
+
+    def restart(self, i: int, group: int = 0) -> float:
+        return self.groups[group].restart(i)
+
+    def partition(self, a: int, b: int, group: int = 0):
+        self.groups[group].partition(a, b)
+
+    def heal(self, a: int = None, b: int = None,
+             group: Optional[int] = None):
+        if group is None:
+            self.net.heal()      # fabric-wide
+        else:
+            self.groups[group].heal(a, b)
+
+    def isolate(self, i: int, group: int = 0):
+        self.groups[group].isolate(i)
+
+    def set_drop_prob(self, p: float):
+        self.net.drop_prob = p
+
+    def force_gc(self, drain: bool = True, max_ticks: int = 8000,
+                 group: int = 0) -> bool:
+        return self.groups[group].force_gc(drain, max_ticks)
+
+    def hard_crash_from(self, exc) -> Optional[Tuple[int, int]]:
+        """Map a mid-I/O SimulatedCrash to (group, node) and hard-crash
+        that replica (the per-group workdirs are disjoint)."""
+        for g, c in enumerate(self.groups):
+            nid = c.hard_crash_from(exc)
+            if nid is not None:
+                return (g, nid)
+        return None
+
+    # ------------------------------------------------------- run shipping
+    def drain_shipping(self, max_ticks: int = 4000) -> bool:
+        return all(c.drain_shipping(max_ticks) for c in self.groups)
+
+    def destroy(self):
+        for c in self.groups:
+            for e in c.engines:
+                if e is not None:
+                    e.close()
+        shutil.rmtree(self.workdir, ignore_errors=True)

@@ -155,7 +155,7 @@ class RunShipper:
         for seq in range(lo, hi):
             chunk = data[seq * self.chunk_bytes:(seq + 1) * self.chunk_bytes]
             self.metrics.on_ship("run", len(chunk))
-            node.net.send(node.nid, peer,
+            node.net.send(node.addr, node._addr(peer),
                           ShipRun(node.current_term, node.nid, rec, seq,
                                   chunk), size=len(chunk))
         ps.last_send = now
@@ -303,7 +303,7 @@ class RunAdopter:
         # graft onto the leader-side GC span that sealed the run (its id
         # crossed the wire in the record); a ctx from a since-replaced
         # tracer shows up as a flagged orphan, never silently dropped
-        sid = t.begin("adopt_run", kind="ship", node=node.nid,
+        sid = t.begin("adopt_run", kind="ship", node=node.addr,
                       parent=rec.get("ctx", 0),
                       level=rec.get("level"),
                       last_index=rec["last_index"]) if t is not None else None
@@ -330,7 +330,7 @@ class RunAdopter:
     def _reply(self, dst: int, pos: Tuple[int, int], have: int,
                resync: bool = False):
         node = self.node
-        node.net.send(node.nid, dst, ShipRunReply(
+        node.net.send(node.addr, node._addr(dst), ShipRunReply(
             node.current_term, pos, have, self.pos, resync))
 
     def reset(self):

@@ -96,7 +96,10 @@ class Tracer:
         self._by_id: Dict[int, Span] = {}
         self._stack: List[int] = []
         self._next = 1
-        self._index_ctx: Dict[int, int] = {}        # raft index -> span id
+        # (raft group, raft index) -> span id.  Multi-Raft: the same raft
+        # index exists independently in every shard group, so the context
+        # registry must be keyed by group too (group None = ungrouped).
+        self._index_ctx: Dict[Tuple[Optional[int], int], int] = {}
 
     # ---------------------------------------------------- span lifecycle
 
@@ -134,6 +137,21 @@ class Tracer:
         """Span id to stamp into an outgoing message (0 = no context)."""
         return self._stack[-1] if self._stack else 0
 
+    def enter(self, sid: int) -> None:
+        """Re-enter an already-open span: make it the current context
+        (stack top) without opening a new one.  Used by the sharded
+        client to interleave work across per-shard subtrees — submits for
+        shard A nest under A's span even while B's span is also open.
+        Pair with exit(); end() still closes the span exactly once."""
+        self._stack.append(sid)
+
+    def exit(self, sid: int) -> None:
+        """Leave a span re-entered via enter() without closing it."""
+        if self._stack and self._stack[-1] == sid:
+            self._stack.pop()
+        elif sid in self._stack:                    # tolerate interleaving
+            self._stack.remove(sid)
+
     def tag(self, sid: int, **tags: Any) -> None:
         sp = self._by_id.get(sid)
         if sp is not None:
@@ -141,18 +159,22 @@ class Tracer:
 
     # ------------------------------------------- cross-node propagation
 
-    def register_index(self, index: int, sid: Optional[int] = None) -> None:
-        """Remember which span originated the op at raft ``index`` so a
-        later AppendEntries batch can carry that context."""
+    def register_index(self, index: int, sid: Optional[int] = None,
+                       group: Optional[int] = None) -> None:
+        """Remember which span originated the op at raft ``index`` (in
+        shard ``group``, None = ungrouped) so a later AppendEntries batch
+        can carry that context."""
         sid = self.current() if sid is None else sid
         if sid:
-            self._index_ctx[index] = sid
+            self._index_ctx[(group, index)] = sid
 
-    def ctx_for_range(self, lo: int, hi: int) -> int:
-        """Newest registered context in [lo, hi] (0 if none — e.g. a
-        no-op barrier or config entry that no client op originated)."""
+    def ctx_for_range(self, lo: int, hi: int,
+                      group: Optional[int] = None) -> int:
+        """Newest registered context in [lo, hi] of ``group`` (0 if none
+        — e.g. a no-op barrier or config entry that no client op
+        originated)."""
         for i in range(hi, lo - 1, -1):
-            sid = self._index_ctx.get(i)
+            sid = self._index_ctx.get((group, i))
             if sid:
                 return sid
         return 0

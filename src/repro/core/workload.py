@@ -190,6 +190,8 @@ class FaultEvent:
     action: str
     arg: float = 0.0
     recovery: bool = False    # marks the end of a disruption window
+    group: Optional[int] = None   # shard group to target (ShardedCluster);
+    #                               None = the cluster itself (or shard 0)
 
     def __post_init__(self):
         if self.action not in ACTIONS:
@@ -208,10 +210,13 @@ class ChaosSchedule:
 
     @classmethod
     def kill_and_recover(cls, at: float = 0.35, restart_at: float = 0.6,
-                         seed: int = 0) -> "ChaosSchedule":
-        """The canonical smoke cycle: one leader kill, one restart."""
-        return cls([FaultEvent(at, "kill_leader"),
-                    FaultEvent(restart_at, "restart", recovery=True)],
+                         seed: int = 0,
+                         group: Optional[int] = None) -> "ChaosSchedule":
+        """The canonical smoke cycle: one leader kill, one restart.
+        `group` aims both events at one shard of a ShardedCluster."""
+        return cls([FaultEvent(at, "kill_leader", group=group),
+                    FaultEvent(restart_at, "restart", recovery=True,
+                               group=group)],
                    seed=seed)
 
     @classmethod
@@ -264,7 +269,9 @@ class _ChaosRunner:
         self.cluster = cluster
         self.pending = list(schedule.events)
         self.n_ops = n_ops
-        self.killed: List[int] = []
+        # (cluster, nid) pairs: over a ShardedCluster a kill lands in one
+        # group's Cluster and the matching restart must revive it THERE
+        self.killed: List[Tuple[object, int]] = []
         self.timeline: List[dict] = []
         self.phase = "steady"
         self._recoveries = sum(1 for e in schedule.events if e.recovery)
@@ -277,8 +284,10 @@ class _ChaosRunner:
         while self.pending and self.pending[0].at * self.n_ops <= op_index:
             ev = self.pending.pop(0)
             detail = self._apply(ev)
-            self.timeline.append({"op": op_index, "action": ev.action,
-                                  "detail": detail})
+            entry = {"op": op_index, "action": ev.action, "detail": detail}
+            if ev.group is not None:
+                entry["group"] = ev.group
+            self.timeline.append(entry)
             if _trace._ACTIVE is not None:
                 # annotation only: audit() ignores the "fault" kind, but
                 # the exported event stream shows WHEN each fault landed
@@ -292,19 +301,28 @@ class _ChaosRunner:
                 if self._recoveries == 0:
                     self.phase = "recovered"
 
-    def _apply(self, ev: FaultEvent):
+    def _target(self, ev: FaultEvent):
+        """The Cluster an event acts on: over a ShardedCluster, the
+        group's own Cluster (ev.group, default shard 0) — every action
+        below then runs verbatim against either topology."""
         c = self.cluster
+        if hasattr(c, "groups"):
+            return c.groups[ev.group if ev.group is not None else 0]
+        return c
+
+    def _apply(self, ev: FaultEvent):
+        c = self._target(ev)
         if ev.action == "kill_leader":
             nid = c.kill_leader()
-            self.killed.append(nid)
+            self.killed.append((c, nid))
             return nid
         if ev.action == "restart":
-            nid = self.killed.pop() if self.killed else None
+            tc, nid = self.killed.pop() if self.killed else (None, None)
             # mid-op crashes can race a scheduled kill: only revive a node
             # that is actually down — and never a membership-removed id
-            if nid is not None and c.nodes[nid] is None \
-                    and nid not in getattr(c, "removed", ()):
-                c.restart(nid)
+            if nid is not None and tc.nodes[nid] is None \
+                    and nid not in getattr(tc, "removed", ()):
+                tc.restart(nid)
             return nid
         if ev.action == "isolate_leader":
             ld = c.elect()
@@ -330,7 +348,7 @@ class _ChaosRunner:
             ld = c.elect()
             if fs is None:                  # no shim: degrade to a polite kill
                 c.crash(ld.nid)
-                self.killed.append(ld.nid)
+                self.killed.append((c, ld.nid))
                 return ld.nid
             # the crash itself fires later, inside whatever put next appends
             # to the leader's value log; the op loop routes it to
@@ -351,7 +369,7 @@ class _ChaosRunner:
             try:
                 c.force_gc()
             except SimulatedCrash as e:
-                return self.on_hard_crash(c.hard_crash_from(e))
+                return self.on_hard_crash(c.hard_crash_from(e), c)
             fs.disarm()                     # GC never touched a run file
             return None
         if ev.action == "crash_mid_adoption":
@@ -374,7 +392,7 @@ class _ChaosRunner:
                         break
                     c.tick()
             except SimulatedCrash as e:
-                return self.on_hard_crash(c.hard_crash_from(e))
+                return self.on_hard_crash(c.hard_crash_from(e), c)
             fs.disarm()                     # nothing shipped in the budget
             return None
         if ev.action == "replace_random_node":
@@ -388,11 +406,18 @@ class _ChaosRunner:
             return {"victim": victim, "new": new}
         raise AssertionError(ev.action)
 
-    def on_hard_crash(self, nid: Optional[int]) -> Optional[int]:
+    def on_hard_crash(self, nid, cluster=None):
         """A mid-op SimulatedCrash killed `nid`: remember it so a later
-        'restart' event revives it like any scheduled kill."""
-        if nid is not None:
-            self.killed.append(nid)
+        'restart' event revives it like any scheduled kill.  `nid` may be
+        a (group, node) pair from ShardedCluster.hard_crash_from."""
+        if nid is None:
+            return None
+        if isinstance(nid, tuple):
+            g, n = nid
+            self.killed.append((self.cluster.groups[g], n))
+        else:
+            self.killed.append((cluster if cluster is not None
+                                else self.cluster, nid))
         return nid
 
 
